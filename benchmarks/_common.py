@@ -1,0 +1,51 @@
+"""Shared benchmark harness: run the serving engine under a paper-workload
+profile and return measured access statistics (MemProf-in-the-loop)."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.workloads import PROFILES, get_profile
+from repro.data.requests import RequestGenerator
+from repro.models.api import get_model
+from repro.runtime.serving import EngineConfig, ServingEngine
+
+_PARAMS_CACHE = {}
+
+
+def engine_for(arch="smollm-360m", seed=0, **ekw):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    if arch not in _PARAMS_CACHE:
+        _PARAMS_CACHE[arch] = api.init(jax.random.PRNGKey(0))
+    kw = dict(max_batch=4, max_len=64, n_pages=512)
+    kw.update(ekw)
+    return cfg, ServingEngine(api, _PARAMS_CACHE[arch], EngineConfig(**kw), seed=seed)
+
+
+def run_workload(name, n_requests=10, seed=0, arch="smollm-360m", prompt=24, decode=8, **ekw):
+    cfg, eng = engine_for(arch, seed=seed, **ekw)
+    prof = dataclasses.replace(get_profile(name), prompt_mean=prompt, decode_mean=decode)
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=seed)
+    stats = eng.run(gen, n_requests=n_requests, max_steps=2000)
+    return eng, stats
+
+
+def stream_for(name, n=20_000, n_blocks=4096, seed=0):
+    """Raw block-access stream for a workload profile (fast path)."""
+    prof = get_profile(name)
+    gen = RequestGenerator(prof, vocab_size=1024, seed=seed)
+    return gen.block_stream(n, n_blocks=n_blocks), prof
+
+
+def fmt_table(rows, headers):
+    w = [max(len(str(r[i])) for r in rows + [headers]) for i in range(len(headers))]
+    out = ["  ".join(str(h).ljust(w[i]) for i, h in enumerate(headers))]
+    out.append("  ".join("-" * w[i] for i in range(len(headers))))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w[i]) for i, c in enumerate(r)))
+    return "\n".join(out)
+
+
+ALL_WORKLOADS = list(PROFILES)

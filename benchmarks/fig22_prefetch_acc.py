@@ -1,0 +1,39 @@
+"""Paper Fig. 22: L2 prefetcher accuracy/coverage per workload.
+
+The paper's finding — high accuracy (>75%) but LOW coverage (<50%) on
+irregular cloud workloads, near-perfect on predictable streams (Ads1 /
+CPU inference) — reproduced with the software far-tier prefetcher on each
+workload profile's block stream.
+"""
+import numpy as np
+
+from repro.core.prefetch import PrefetchEngine
+
+from _common import ALL_WORKLOADS, fmt_table, stream_for
+
+
+def main(predictor="nextline"):
+    rows = []
+    out = {}
+    for name in ALL_WORKLOADS:
+        stream, prof = stream_for(name, n=12_000)
+        eng = PrefetchEngine(predictor=predictor, buffer_blocks=256, degree=1)
+        for b in stream:
+            eng.access(int(b), is_far=True)
+        s = eng.stats
+        rows.append((name, f"{s.accuracy*100:5.1f}%", f"{s.coverage*100:5.1f}%", f"{s.bw_overhead*100:5.1f}%"))
+        out[name] = (s.accuracy, s.coverage)
+    # the predictable sequential stream (Ads1-like CPU inference analogue)
+    eng = PrefetchEngine(predictor="nextline", buffer_blocks=128, degree=4)
+    for b in np.tile(np.arange(512), 8):
+        eng.access(int(b), is_far=True)
+    s = eng.stats
+    rows.append(("sequential(KV walk)", f"{s.accuracy*100:5.1f}%", f"{s.coverage*100:5.1f}%", f"{s.bw_overhead*100:5.1f}%"))
+    print(f"[fig22] far-tier prefetcher accuracy/coverage (predictor={predictor})")
+    print(fmt_table(rows, ["workload", "accuracy", "coverage", "bw overhead"]))
+    print("paper: accuracy >75%, coverage <50% for most services; regular streams prefetch well")
+    return out
+
+
+if __name__ == "__main__":
+    main()

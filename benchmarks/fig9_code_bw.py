@@ -1,0 +1,41 @@
+"""Paper Fig. 9: code-bandwidth distribution -> parameter/state-block CDF.
+
+X: hottest blocks (MiB, cumulative); Y: fraction of total access bandwidth.
+The paper's shape — a small hot set serving most fetches with a very long
+infrequent tail — reproduces for every workload profile.
+"""
+import numpy as np
+
+from repro.core import distribution as dist
+
+from _common import ALL_WORKLOADS, fmt_table, stream_for
+
+BLOCK_BYTES = 4096
+MIB = 2**20
+
+
+def main():
+    marks = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+    rows = []
+    out = {}
+    for name in ALL_WORKLOADS:
+        stream, prof = stream_for(name, n=60_000)
+        counts = np.bincount(stream, minlength=prof.n_blocks)
+        order = np.argsort(-counts)
+        cum = np.cumsum(counts[order]) / max(counts.sum(), 1)
+        mib = np.arange(1, len(cum) + 1) * BLOCK_BYTES / MIB
+        row = [name]
+        for m in marks:
+            idx = np.searchsorted(mib, m)
+            row.append(f"{cum[min(idx, len(cum)-1)]*100:5.1f}%")
+        footprint = (counts > 0).sum() * BLOCK_BYTES / MIB
+        row.append(f"{footprint:.1f}")
+        rows.append(tuple(row))
+        out[name] = float(cum[min(np.searchsorted(mib, 1.0), len(cum) - 1)])
+    print("[fig9] cumulative access-bandwidth share of the hottest X MiB")
+    print(fmt_table(rows, ["workload"] + [f"{m}MiB" for m in marks] + ["footprint"]))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Per-kernel microbench: wall time (interpret mode on CPU — correctness
+path), analytic FLOPs/bytes, and arithmetic intensity vs the v5e ridge.
+
+On TPU the same entry points run compiled (interpret=False); the analytic
+intensity column tells where each kernel sits against the 197TF/819GB/s
+ridge (240 FLOP/B): attention prefill is compute-side, decode/gather are
+memory-side — matching each cell's roofline bound in EXPERIMENTS.md.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hw
+
+from _common import fmt_table
+
+RIDGE = hw.PEAK_FLOPS_BF16 / hw.HBM_BW
+
+
+def timed(fn, *args, n=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def main():
+    rows = []
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    # flash attention (prefill tile)
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    B, H, L, D = 1, 4, 256, 64
+    q = jax.random.normal(k0, (B, H, L, D), jnp.float32)
+    k = jax.random.normal(k1, (B, H, L, D), jnp.float32)
+    v = jax.random.normal(k2, (B, H, L, D), jnp.float32)
+    dt = timed(flash_attention, q, k, v, n=2)
+    flops = 4 * B * H * L * L * D
+    bts = (3 * B * H * L * D + B * H * L * D) * 2
+    rows.append(("flash_attention", f"{dt*1e3:8.1f}", f"{flops/1e9:7.2f}", f"{bts/1e6:7.2f}", f"{flops/bts:7.1f}", "compute" if flops / bts > RIDGE else "memory"))
+
+    # paged attention (decode)
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    Bq, Hq, Hkv, d, P, ps, pp = 8, 8, 2, 64, 64, 16, 16
+    qd = jax.random.normal(k0, (Bq, Hq, d))
+    kp = jax.random.normal(k1, (Hkv, P, ps, d))
+    vp = jax.random.normal(k2, (Hkv, P, ps, d))
+    pt = jax.random.randint(k3, (Bq, pp), 0, P)
+    lens = jnp.full((Bq,), pp * ps, jnp.int32)
+    dt = timed(paged_attention, qd, kp, vp, pt, lens, n=2)
+    S = pp * ps
+    flops = 4 * Bq * Hq * S * d
+    bts = Bq * 2 * Hkv * S * d * 2  # stream K+V once
+    rows.append(("paged_attention", f"{dt*1e3:8.1f}", f"{flops/1e9:7.2f}", f"{bts/1e6:7.2f}", f"{flops/bts:7.1f}", "memory"))
+
+    # rwkv6 scan
+    from repro.kernels.rwkv6_scan.ops import wkv6_chunked
+
+    B2, T, H2, K2 = 1, 128, 4, 32
+    r = jax.random.normal(k0, (B2, T, H2, K2))
+    kk = jax.random.normal(k1, (B2, T, H2, K2))
+    vv = jax.random.normal(k2, (B2, T, H2, K2))
+    lw = -jnp.exp(jax.random.normal(k3, (B2, T, H2, K2)))
+    u = jax.random.normal(k0, (H2, K2))
+    dt = timed(wkv6_chunked, r, kk, vv, lw, u, n=1)
+    flops = 4 * B2 * T * H2 * K2 * K2
+    bts = 4 * B2 * T * H2 * K2 * 4
+    rows.append(("rwkv6_scan", f"{dt*1e3:8.1f}", f"{flops/1e9:7.2f}", f"{bts/1e6:7.2f}", f"{flops/bts:7.1f}", "compute" if flops / bts > RIDGE else "memory"))
+
+    # mamba2 scan
+    from repro.kernels.mamba2_scan.ops import ssd_chunked
+
+    Hm, P2, N = 4, 32, 16
+    x = jax.random.normal(k0, (B2, T, Hm, P2))
+    dts = jax.nn.softplus(jax.random.normal(k1, (B2, T, Hm)))
+    A = -jnp.exp(jax.random.normal(k2, (Hm,)))
+    Bm = jax.random.normal(k3, (B2, T, N))
+    C = jax.random.normal(k0, (B2, T, N))
+    Dv = jnp.ones((Hm,))
+    dt = timed(ssd_chunked, x, dts, A, Bm, C, Dv, n=1)
+    flops = 4 * B2 * T * Hm * P2 * N
+    bts = B2 * T * (Hm * P2 * 2 + 2 * N) * 4
+    rows.append(("mamba2_scan", f"{dt*1e3:8.1f}", f"{flops/1e9:7.2f}", f"{bts/1e6:7.2f}", f"{flops/bts:7.1f}", "memory"))
+
+    # tiered gather
+    from repro.kernels.tiered_gather.ops import gather_rows
+
+    src = jax.random.normal(k0, (4096, 512))
+    ids = jax.random.randint(k1, (256,), 0, 4096)
+    dt = timed(gather_rows, src, ids, n=2)
+    bts = 256 * 512 * 4 * 2
+    rows.append(("tiered_gather", f"{dt*1e3:8.1f}", f"{0.0:7.2f}", f"{bts/1e6:7.2f}", f"{0.0:7.1f}", "memory"))
+
+    print(f"[kernels] interpret-mode timing (CPU correctness path) + analytic v5e roofline position (ridge={RIDGE:.0f} FLOP/B)")
+    print(fmt_table(rows, ["kernel", "ms(interp)", "GFLOP", "MB", "FLOP/B", "v5e side"]))
+    return {r[0]: r[4] for r in rows}
+
+
+if __name__ == "__main__":
+    main()

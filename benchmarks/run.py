@@ -1,0 +1,47 @@
+"""Benchmark suite driver: one benchmark per paper table/figure.
+
+PYTHONPATH=src python -m benchmarks.run            # all
+PYTHONPATH=src python -m benchmarks.run table5     # one
+"""
+import importlib
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))  # allow intra-package helpers
+
+MODULES = [
+    "fig9_code_bw",
+    "table2_correlation",
+    "fig13_pooling",
+    "fig17_pagetable",
+    "fig18_membw_dist",
+    "table5_tiering",
+    "fig21_prefetch_bw",
+    "fig22_prefetch_acc",
+    "table6_trace",
+    "kernels_bench",
+]
+
+
+def main(argv):
+    sel = [m for m in MODULES if not argv or any(a in m for a in argv)]
+    failures = []
+    for name in sel:
+        print("\n" + "=" * 78)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(name)
+            mod.main()
+            print(f"[{name}] ok in {time.time()-t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"[{name}] FAILED:\n{traceback.format_exc(limit=6)}")
+    print("\n" + "=" * 78)
+    print(f"benchmarks: {len(sel) - len(failures)}/{len(sel)} ok" + (f"; failed: {failures}" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

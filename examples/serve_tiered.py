@@ -1,0 +1,54 @@
+"""Tiered serving demo: paged KV + prefix sharing + TPP placement + prefetch.
+
+Two engines serve the same Web1-like traffic (high shared-prefix rate):
+one with the paper's techniques ON, one with sharing off and a cold-only
+placement — the deltas are the paper's Table 5 / Fig. 17 story live.
+
+PYTHONPATH=src python examples/serve_tiered.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator
+from repro.models.api import get_model
+from repro.runtime.serving import EngineConfig, ServingEngine
+
+
+def run(share: float, near_frac: float, label: str, n_requests=12):
+    cfg = get_config("smollm-360m").reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(
+        api, params,
+        EngineConfig(max_batch=4, max_len=96, n_pages=1024, near_frac=near_frac),
+    )
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=48, decode_mean=10,
+        prefix_share=share, n_prefixes=2,
+    )
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=0)
+    stats = eng.run(gen, n_requests=n_requests, max_steps=5000)
+    pt = eng.pagetable.stats()
+    print(f"[{label}]")
+    print(f"  prefill tokens {stats['prefill_tokens']} (saved {stats['prefill_tokens_saved']} via shared prefixes)")
+    print(f"  near-tier hit rate {stats['near_hit_rate']:.3f}  migrations {stats['migrations']}")
+    print(f"  page dedup {pt['dedup_ratio']:.2f}x  (shared mappings {pt['shared_mappings']}, COW {pt['cow_copies']})")
+    print(f"  prefetch acc {stats['prefetch_accuracy']:.2f} cov {stats['prefetch_coverage']:.2f} "
+          f"bw overhead {stats['prefetch_bw_overhead']:.2f}")
+    return stats
+
+
+def main():
+    on = run(share=0.95, near_frac=0.30, label="technique ON  (sharing + 30% near tier)")
+    off = run(share=0.0, near_frac=0.05, label="technique OFF (no sharing, 5% near tier)")
+    saved = on["prefill_tokens_saved"]
+    print(f"\nprefix sharing recovered {saved} prefill tokens; "
+          f"near-hit {on['near_hit_rate']:.2f} vs {off['near_hit_rate']:.2f}")
+    print("serve_tiered ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: atomic, sharded, async, reshard-on-restore.
+
+Layout (one directory per step):
+    <dir>/step_000123.tmp/      # written first
+        meta.json               # step, tree structure, shapes/dtypes, extras
+        arr_00000.npy ...       # one file per leaf (this host's shards)
+    <dir>/step_000123/          # atomic rename AFTER all files are fsynced
+
+Crash-safety: a checkpoint either has its final name (complete) or is a
+.tmp orphan (ignored + GC'd). ``save_async`` snapshots to host memory
+synchronously (cheap) and writes on a background thread so the train loop
+overlaps I/O with compute. ``restore`` takes target shardings — restoring
+onto a different mesh (elastic shrink/grow) just reshards on device_put.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.gc_orphans()
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def gc_orphans(self):
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    def latest_step(self) -> Optional[int]:
+        steps = [
+            int(n.split("_")[1])
+            for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        ]
+        return max(steps) if steps else None
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, leaves: list, treedef_str: str, extras: dict):
+        tmp = self._step_dir(step) + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        meta = {
+            "step": step,
+            "treedef": treedef_str,
+            "n_leaves": len(leaves),
+            "dtypes": [str(l.dtype) for l in leaves],
+            "shapes": [list(l.shape) for l in leaves],
+            "extras": extras,
+        }
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), leaf)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extras: Optional[dict] = None):
+        """Synchronous atomic save (state: any pytree of arrays)."""
+        self.wait()
+        leaves, treedef = _flatten(state)
+        host = [np.asarray(l) for l in leaves]
+        self._write(step, host, str(treedef), extras or {})
+
+    def save_async(self, step: int, state: Any, extras: Optional[dict] = None):
+        """Snapshot synchronously, write in the background."""
+        self.wait()
+        leaves, treedef = _flatten(state)
+        host = [np.asarray(l) for l in leaves]  # device->host copy (the snapshot)
+        td = str(treedef)
+        ex = extras or {}
+
+        def _worker():
+            try:
+                self._write(step, host, td, ex)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_worker, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def restore(self, template: Any, step: Optional[int] = None, shardings: Any = None):
+        """Restore into ``template``'s tree structure.
+
+        ``shardings``: optional pytree of Shardings (same structure) — this is
+        the elastic-reshard path: arrays are device_put onto the NEW mesh no
+        matter what mesh wrote them.
+        Returns (state, extras).
+        """
+        self.wait()
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        leaves = [np.load(os.path.join(d, f"arr_{i:05d}.npy")) for i in range(meta["n_leaves"])]
+        t_leaves, treedef = _flatten(template)
+        assert len(t_leaves) == len(leaves), "checkpoint/template leaf mismatch"
+        if shardings is not None:
+            s_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+            )
+            leaves = [jax.device_put(l, s) for l, s in zip(leaves, s_leaves)]
+        else:
+            leaves = [jax.numpy.asarray(l) for l in leaves]
+        return jax.tree.unflatten(treedef, leaves), meta["extras"]

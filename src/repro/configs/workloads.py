@@ -1,0 +1,54 @@
+"""The paper's nine production microservices as serving-workload profiles.
+
+Each profile parameterizes a request stream for the serving engine: prompt
+prefix sharing (Web services share page templates -> shared KV prefixes),
+access skew over state blocks (Zipf alpha), request length distributions,
+and read/write mix. Alphas are set so the measured bandwidth distributions
+land where the paper's Fig. 9/18 put each service (e.g. Reader's near-tier
+hit fraction ~0.81 at a 37.5% capacity split, Table 5).
+
+These drive benchmarks/fig9, fig17, fig18, table5, fig21, fig22, table6.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    name: str
+    zipf_alpha: float  # skew of block accesses (embedding/KV/expert streams)
+    prefix_share: float  # probability a request reuses a shared prompt prefix
+    n_prefixes: int  # size of the shared-prefix pool
+    prompt_mean: int  # prompt length (tokens)
+    decode_mean: int  # decode length (tokens)
+    rw_ratio: float  # target read:write ratio (paper Table 6 scale)
+    frontend_bound: float  # fraction of stalls that are code-fetch (Fig. 7)
+    n_blocks: int = 4096  # profiled state blocks
+    seq_jump: float = 0.4  # P(break the sequential run) per access: low =
+    # predictable stream (Ads1 inference), high = random KV lookups (Cache)
+
+
+# values follow the qualitative placement of Fig. 7 + Table 2/6:
+# Web1/Web2: highly frontend bound, huge shared templates;
+# Cache1/2: Zipfian key-value skew, Cache1 splits workload/NIC cores;
+# Ads: mixed, inference-like predictable streams (Ads1 prefetches well);
+# Feed: balanced; Reader: most backend/bandwidth bound (the Table 5 subject).
+PROFILES: dict[str, WorkloadProfile] = {
+    "Web1": WorkloadProfile("Web1", 1.25, 0.85, 32, 512, 64, 1.72, 0.35, n_blocks=8192, seq_jump=0.5),
+    "Web2": WorkloadProfile("Web2", 1.22, 0.80, 64, 384, 96, 1.70, 0.33, n_blocks=8192, seq_jump=0.5),
+    "Ads1": WorkloadProfile("Ads1", 1.15, 0.30, 128, 256, 32, 1.90, 0.15, n_blocks=8192, seq_jump=0.08),
+    "Ads2": WorkloadProfile("Ads2", 1.12, 0.35, 128, 256, 48, 1.85, 0.18, n_blocks=8192, seq_jump=0.4),
+    "Ads3": WorkloadProfile("Ads3", 1.10, 0.25, 256, 192, 48, 1.80, 0.20, n_blocks=8192, seq_jump=0.45),
+    "Cache1": WorkloadProfile("Cache1", 1.30, 0.10, 512, 64, 8, 1.84, 0.22, n_blocks=8192, seq_jump=0.85),
+    "Cache2": WorkloadProfile("Cache2", 1.28, 0.10, 512, 64, 8, 1.95, 0.30, n_blocks=8192, seq_jump=0.8),
+    "Feed": WorkloadProfile("Feed", 1.15, 0.45, 96, 320, 64, 2.14, 0.25, n_blocks=8192, seq_jump=0.55),
+    # Reader's alpha is CALIBRATED: at the 37.5% near split it must serve
+    # ~82% of traffic from the near tier (paper Table 5's measured 84.6 vs
+    # 19.2 GiB/s split) — that is what lands Tiered at 1.46x.
+    "Reader": WorkloadProfile("Reader", 0.86, 0.20, 256, 448, 96, 1.60, 0.08, n_blocks=4096, seq_jump=0.55),
+}
+
+
+def get_profile(name: str) -> WorkloadProfile:
+    return PROFILES[name]

@@ -1,0 +1,12 @@
+"""memtier core: the paper's contribution as a composable library.
+
+profiler    — MemProf analogue (block-access accounting, CDFs, correlation)
+distribution— hotness CDF math / Zipf fits / interval stability
+tiering     — tier specs, planner, bandwidth-bound throughput model (Table 4/5)
+placement   — TPP-like hot/cold placement + migration
+prefetch    — software far-tier prefetch engine + accuracy/coverage (Fig 21/22)
+pagetable   — ref-counted prefix-shared KV page table (multi-ASID I-TLB analogue)
+pooling     — cluster weight pooling (shared-L2 analogue, ZeRO via GSPMD)
+memtrace    — windowed trace capture + stitch + cache-sim validation (Table 6)
+hw          — TPU v5e + memory-tier hardware constants
+"""

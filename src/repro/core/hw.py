@@ -1,0 +1,55 @@
+"""Hardware model: TPU v5e target + memory-tier specs.
+
+Roofline constants come from the assignment: 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI. Tier specs mirror the paper's Table 4
+(near = HB-DIMM-like: 2x BW, 2x cost; far = CXL-like: DDR BW, higher
+latency) so benchmarks/table5_tiering.py can reproduce Table 5 with the
+paper's own constants; the TPU serving tiers (HBM vs host DRAM over PCIe)
+are the deployment analogue.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# --- TPU v5e (per chip) -----------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+HBM_BYTES = 16 * 2**30
+ICI_BW_PER_LINK = 50e9  # B/s
+VMEM_BYTES = 128 * 2**20
+# host link (far tier for serving state): PCIe gen4-ish per chip share
+HOST_LINK_BW = 32e9  # B/s
+DCI_BW = 25e9  # B/s per chip share, cross-pod (pod axis collectives)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    name: str
+    capacity_frac: float  # fraction of total workload memory capacity
+    bw: float  # B/s usable peak
+    latency_rel: float  # relative load latency (near == 1.0)
+    cost_per_unit: float  # relative $ per byte (DDR == 1.0)
+
+    @property
+    def cost(self) -> float:
+        return self.capacity_frac * self.cost_per_unit
+
+
+# --- the paper's Table 4 configurations ------------------------------------
+GB = 1e9
+BASELINE = (TierSpec("ddr", 1.0, 100 * GB, 1.0, 1.0),)
+IDEAL = (TierSpec("hb-dimm", 1.0, 200 * GB, 1.0, 2.0),)
+TIERED = (
+    TierSpec("hb-dimm", 0.375, 200 * GB, 1.0, 2.0),
+    TierSpec("cxl", 0.625, 100 * GB, 1.8, 1.0),
+)
+
+# --- TPU serving tiers (deployment analogue) --------------------------------
+TPU_TIERED = (
+    TierSpec("hbm", 0.30, HBM_BW, 1.0, 8.0),
+    TierSpec("host-dram", 0.70, HOST_LINK_BW, 6.0, 1.0),
+)
+
+# utilization knee: production workloads can't push DDR past ~60-70% without
+# the latency blow-up the paper describes (Fig. 4); microbenchmarks can.
+BW_KNEE = 0.68

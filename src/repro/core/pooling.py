@@ -1,0 +1,87 @@
+"""Cluster weight pooling — the paper's shared-L2 proposal, TPU-native.
+
+Paper: four cores run identical code, so pool their four private L2s into one
+shared L2 -> 4x apparent capacity, same silicon. Here: k data-parallel
+replicas hold identical parameters, so store each parameter 1/k-sharded over
+the ``pool`` mesh axis and all-gather it just-in-time inside the step ->
+k x apparent HBM per replica, same chips. The gather is expressed as a
+sharding constraint, so XLA SPMD schedules it (and overlaps it with the
+previous layer's compute); its transpose in the backward pass is the
+reduce-scatter that keeps gradients and optimizer state sharded (ZeRO-1/2/3
+in one move).
+
+``pooled_specs`` picks, per parameter, the largest dimension that is still
+unsharded and divisible by the pool-axis size, and shards it. ``gather`` is
+the in-step constraint back to the compute (TP-only) layout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.launch import mesh as meshlib
+from repro.launch.mesh import POOL
+
+
+def _is_spec(s) -> bool:
+    return isinstance(s, tuple)
+
+
+def pooled_specs(compute_specs, abstract_params, mesh) -> dict:
+    """Storage specs: compute specs + POOL axis on the best available dim.
+
+    ``abstract_params``: pytree of ShapeDtypeStruct (from jax.eval_shape).
+    Leaves whose dims are all sharded/non-divisible stay at compute layout.
+    """
+    if POOL not in mesh.axis_names:
+        return compute_specs
+    k = dict(zip(mesh.axis_names, mesh.devices.shape))[POOL]
+
+    def one(spec, aval):
+        spec = tuple(spec)
+        best, best_size = None, 0
+        for i, (s, dim) in enumerate(zip(spec, aval.shape)):
+            if s is None and dim % k == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best is None:
+            return spec
+        out = list(spec)
+        out[best] = POOL
+        return tuple(out)
+
+    return jax.tree.map(one, compute_specs, abstract_params, is_leaf=_is_spec)
+
+
+def gather(params, compute_specs):
+    """In-step all-gather: constrain pooled params back to compute layout.
+
+    Under jax.grad, the transpose of this constraint reduce-scatters the
+    gradients back to the pooled layout — no explicit collectives needed.
+    """
+    return jax.tree.map(
+        lambda p, s: meshlib.shard(p, *s),
+        params,
+        compute_specs,
+        is_leaf=lambda x: _is_spec(x) and not isinstance(x, jax.Array),
+    )
+
+
+def apparent_capacity_model(
+    param_bytes: float, hbm_bytes: float, cluster: int, gather_bytes_per_step: Optional[float] = None
+) -> dict:
+    """Analytical model for benchmarks/fig13_pooling.py (IPC-vs-cache analogue).
+
+    Returns per-replica HBM freed and the gather traffic paid, as the paper
+    reports apparent-cache-size vs performance.
+    """
+    resident = param_bytes / cluster
+    freed = param_bytes - resident
+    return {
+        "cluster": cluster,
+        "resident_bytes": resident,
+        "freed_bytes": freed,
+        "apparent_capacity_x": min(cluster, hbm_bytes / max(resident, 1.0)),
+        "gather_bytes": gather_bytes_per_step if gather_bytes_per_step is not None else param_bytes * (cluster - 1) / cluster,
+    }

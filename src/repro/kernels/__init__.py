@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the memory-bandwidth hot spots the paper targets.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper: padding, GQA head mapping, dtype policy),
+ref.py (pure-jnp oracle used by tests and by the models' default path).
+
+flash_attention — blocked online-softmax attention (prefill/train)
+paged_attention — decode attention over paged KV via scalar-prefetch page table
+tiered_gather   — hot-tier row gather (+ int8 far-tier dequant fusion)
+rwkv6_scan      — chunked WKV6 with per-channel data-dependent decay
+mamba2_scan     — chunked SSD state-space scan
+"""

@@ -1,0 +1,122 @@
+"""Flash attention Pallas TPU kernel.
+
+Grid: (batch, q_heads, Lq/block_q, Lk/block_k) — the KV-block axis is the
+innermost (sequential on TPU), so the online-softmax running state
+(m, l, acc) lives in VMEM scratch and is carried across KV blocks.
+
+VMEM working set per step: q (bq, D) + k/v (bk, D) + acc (bq, D) + scores
+(bq, bk) — with bq=bk=512, D=128 in f32 that's ~2.8 MiB, comfortably under
+the ~16 MiB/core VMEM budget of v5e while keeping the MXU matmul dims
+(bq x D x bk) at multiples of 128.
+
+GQA without KV expansion: the K/V index maps divide the query-head index by
+the group size, so each KV head's blocks are fetched once per group.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal, scale, lk_valid, q_offset):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+    bq, d = q.shape
+    bk = k.shape[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kpos < lk_valid
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+        valid = valid & (kpos <= qpos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]  # (bq,)
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    lk_valid: int | None = None,
+    q_offset: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D). Dims must divide the blocks.
+
+    Returns (B, Hq, Lq, D) in q.dtype. ``lk_valid`` is the unpadded K length
+    (ops.py pads K/V; rows at kpos >= lk_valid are masked). ``q_offset`` is
+    the absolute position of q row 0 (for prefix alignment: lk_true - lq_true).
+    """
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0, (lq, lk, block_q, block_k)
+    grid = (b, hq, lq // block_q, lk // block_k)
+    scale = 1.0 / math.sqrt(d)
+    lk_valid = lk if lk_valid is None else lk_valid
+    q_offset = (lk_valid - lq) if q_offset is None else q_offset
+
+    kernel = functools.partial(
+        _kernel, causal=causal, scale=scale, lk_valid=lk_valid, q_offset=q_offset
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, h, i, j, g=group: (bb, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, h, i, j, g=group: (bb, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # m (lane-replicated)
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # l
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

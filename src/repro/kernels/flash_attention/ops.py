@@ -1,0 +1,68 @@
+"""Public flash-attention op: padding + dtype policy + jit wrapper.
+
+Pads Lq/Lk to block multiples and head_dim to 128 lanes (e.g. smollm's 64)
+before calling the kernel; causal masking of the padded tail happens via the
+valid-length mask (padding K rows land beyond lk_valid and score -inf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+LANE = 128
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 512, block_k: int = 512, interpret: bool = True
+):
+    """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D).
+
+    interpret=True by default: this container is CPU-only; on TPU pass False.
+    """
+    b, hq, lq, d = q.shape
+    lk = k.shape[2]
+    bq = min(block_q, max(lq, 8))
+    bk = min(block_k, max(lk, 8))
+
+    q, dpad = _pad_to(q, 3, LANE)
+    k, _ = _pad_to(k, 3, LANE)
+    v, _ = _pad_to(v, 3, LANE)
+    # scale uses the PADDED head dim inside the kernel; compensate so that
+    # softmax(q k^T / sqrt(d_orig)) is preserved.
+    if dpad:
+        q = q * jnp.asarray((d + dpad) ** 0.5 / d**0.5, q.dtype)
+
+    q, qpad = _pad_to(q, 2, bq)
+    k, kpad = _pad_to(k, 2, bk)
+    v, _ = _pad_to(v, 2, bk)
+
+    # kernel masks kpos >= lk_valid; padded K tail must be masked, so pass
+    # the ORIGINAL lk. Padded Q rows compute garbage and are sliced off.
+    out = flash_attention_kernel(
+        q,
+        k,
+        v,
+        causal=causal,
+        block_q=bq,
+        block_k=bk,
+        lk_valid=lk,
+        q_offset=lk - lq,
+        interpret=interpret,
+    )
+    return out[:, :, :lq, :d]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal optional)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D); Hq % Hkv == 0.
+
+    Plain softmax attention in f32 — the semantic ground truth.
+    """
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, lq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(lk)[None, :] <= jnp.arange(lq)[:, None] + (lk - lq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, lq, d).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.mamba2_scan.ops import ssd_chunked  # noqa: F401
+from repro.kernels.mamba2_scan.ref import ssd_ref  # noqa: F401

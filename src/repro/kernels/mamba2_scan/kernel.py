@@ -1,0 +1,106 @@
+"""Chunked SSD (Mamba2) Pallas TPU kernel.
+
+Per (batch, head) the time axis is processed in chunks of C steps with the
+cross-chunk state S (P x N) in VMEM scratch. Within a chunk (decay is a
+SCALAR per head per step — simpler than RWKV6's per-channel decay):
+
+  la[t]  = dt[t] * A                  (<= 0)
+  cwi    = cumsum(la)                  (inclusive)
+  G[t,s] = exp(cwi[t] - cwi[s]) dt[s]  for s <= t else 0
+  y      = ((C_mat @ B^T) * G) @ x  +  exp(cwi)[:,None] * (C_mat @ S_in^T)  +  D*x
+  S_out  = exp(cwi[-1]) S_in + (x * (exp(cwi[-1]-cwi) dt)[:,None])^T @ B
+
+All exponents <= 0: unconditionally overflow-safe. Grid (B, H, T/C), chunk
+axis innermost. The (C_mat @ B^T) Gram matrix is shared across heads in
+principle (B/C are per-group); this kernel recomputes it per head — an
+acceptable FLOP trade at N=64 vs. the extra VMEM residency (noted as a
+future optimization in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, s0_ref, y_ref, sout_ref, s_ref):
+    t_idx = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (C, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (C,)
+    bmat = b_ref[0].astype(jnp.float32)  # (C, N)
+    cmat = c_ref[0].astype(jnp.float32)  # (C, N)
+    a = a_ref[0]  # scalar
+    d = d_ref[0]
+    c, p = x.shape
+
+    la = dt * a  # (C,) <= 0
+    cwi = jnp.cumsum(la)
+    gram = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C): C_t . B_s
+    g = jnp.exp(cwi[:, None] - cwi[None, :]) * dt[None, :]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    g = jnp.where(si <= ti, g, 0.0)
+    y = jax.lax.dot_general(
+        gram * g, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, P)
+
+    s_in = s_ref[...]  # (P, N)
+    carry = jax.lax.dot_general(
+        cmat, s_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, P)
+    y = y + jnp.exp(cwi)[:, None] * carry + d * x
+
+    wtail = jnp.exp(cwi[-1] - cwi) * dt  # (C,)
+    s_new = jnp.exp(cwi[-1]) * s_in + jax.lax.dot_general(
+        x * wtail[:, None], bmat, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P, N)
+    s_ref[...] = s_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(t_idx == nt - 1)
+    def _final():
+        sout_ref[0, 0] = s_new.astype(sout_ref.dtype)
+
+
+def ssd_chunked_kernel(x, dt, a, b, c, d, s0, *, chunk: int = 64, interpret: bool = False):
+    """x: (B,H,T,P); dt: (B,H,T); a,d: (H,); b,c: (B,T,N); s0: (B,H,P,N).
+
+    Returns (y (B,H,T,P) f32, s_out (B,H,P,N) f32). T % chunk == 0.
+    """
+    bb, h, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0
+    grid = (bb, h, t // chunk)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda i, j, k: (i, j, k)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, k: (i, k, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, k: (i, k, 0)),
+            pl.BlockSpec((1,), lambda i, j, k: (j,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i, j, k: (j,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, k: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, k: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb, h, t, p), jnp.float32),
+            jax.ShapeDtypeStruct((bb, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b, c, a, d, s0)

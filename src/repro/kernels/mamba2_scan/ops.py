@@ -1,0 +1,36 @@
+"""Public SSD op: layout transpose, chunk padding, state threading."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_scan.kernel import ssd_chunked_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, dt, A, B, C, D, state=None, *, chunk: int = 64, interpret: bool = True):
+    """Model-layout SSD: x (B,T,H,P); dt (B,T,H); A,D (H,); B,C (B,T,N).
+
+    Returns (y (B,T,H,P) f32, final_state (B,H,P,N) f32). Pads T to a chunk
+    multiple with identity steps (dt=0: no decay, no input, no output used).
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+    pad = (-t) % chunk
+    xk = x.transpose(0, 2, 1, 3).astype(jnp.float32)
+    dtk = dt.transpose(0, 2, 1).astype(jnp.float32)
+    Bk, Ck = B.astype(jnp.float32), C.astype(jnp.float32)
+    if pad:
+        xk = jnp.pad(xk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dtk = jnp.pad(dtk, ((0, 0), (0, 0), (0, pad)))
+        Bk = jnp.pad(Bk, ((0, 0), (0, pad), (0, 0)))
+        Ck = jnp.pad(Ck, ((0, 0), (0, pad), (0, 0)))
+    y, s_out = ssd_chunked_kernel(
+        xk, dtk, A.astype(jnp.float32), Bk, Ck, D.astype(jnp.float32),
+        state.astype(jnp.float32), chunk=min(chunk, t + pad), interpret=interpret,
+    )
+    return y[:, :, :t, :].transpose(0, 2, 1, 3), s_out

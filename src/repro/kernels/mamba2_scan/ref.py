@@ -1,0 +1,34 @@
+"""Oracle: sequential SSD recurrence (same math as models/mamba2.ssd_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D, state=None):
+    """x: (b,T,H,P); dt: (b,T,H); A,D: (H,); B,C: (b,T,N).
+
+    Returns (y (b,T,H,P), final_state (b,H,P,N)). All f32.
+    S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_t^T ;  y_t = S_t C_t + D x_t
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(s, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t * A)
+        s = s * da[..., None, None] + (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B.transpose(1, 0, 2).astype(jnp.float32),
+        C.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, state

@@ -1,0 +1,114 @@
+"""Paged decode-attention Pallas TPU kernel.
+
+The physical KV pool lives in HBM as (Hkv, n_pages, page_size, d); the
+logical sequence -> physical page mapping (the KV "page table" — the
+framework's I-TLB analogue, see core/pagetable.py) is SCALAR-PREFETCHED so
+the K/V BlockSpec index maps are data-dependent: grid step (b, h, p) pulls
+physical page page_table[b, p] into VMEM. This is the TPU-native form of the
+paper's insight that translation (page table) and data (pages) are separate
+streams: translations ride the scalar core; pages ride the DMA engine.
+
+Grid: (B, Hkv, pages_per_seq) with the page axis innermost — online-softmax
+state (m, l, acc) is carried in VMEM scratch across a sequence's pages.
+VMEM per step: one K page + one V page (ps x d) + q (G x d) + acc — with
+ps=128, d=128, bf16 that's ~130 KiB: tiny; many sequences' streams can be
+double-buffered by the pipeline.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, page_size, scale):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(p * page_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (ps, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        g = q.shape[0]
+        ps = k.shape[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, ps)
+        kpos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        pexp = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to((l_ref[:, 0] * corr + pexp.sum(axis=1))[:, None], l_ref.shape)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            pexp.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+
+    @pl.when(p == npages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hkv, G, d); pages: (Hkv, P, ps, d); page_table: (B, pp) int32;
+    lengths: (B,) int32. Returns (B, Hkv, G, d)."""
+    b, hkv, g, d = q.shape
+    _, nphys, ps, _ = k_pages.shape
+    pp = page_table.shape[1]
+    grid = (b, hkv, pp)
+    flat_pt = page_table.reshape(-1)
+
+    def q_map(bb, h, p, pt, lens):
+        return (bb, h, 0, 0)
+
+    def kv_map(bb, h, p, pt, lens):
+        return (h, pt[bb * pp + p], 0, 0)
+
+    kernel = functools.partial(_kernel, page_size=ps, scale=1.0 / math.sqrt(d))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), q_map),
+                pl.BlockSpec((1, 1, ps, d), kv_map),
+                pl.BlockSpec((1, 1, ps, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((g, LANES), jnp.float32),
+                pltpu.VMEM((g, LANES), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(flat_pt, lengths, q, k_pages, v_pages)

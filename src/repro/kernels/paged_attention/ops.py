@@ -1,0 +1,38 @@
+"""Public paged-attention op: GQA reshaping + sublane/lane padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+
+LANE = 128
+MIN_G = 8  # sublane floor for the q block
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: bool = True):
+    """q: (B, Hq, d); k/v_pages: (Hkv, P, ps, d); page_table: (B, pp);
+    lengths: (B,). Returns (B, Hq, d)."""
+    b, hq, d = q.shape
+    hkv = k_pages.shape[0]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+
+    gpad = (-g) % MIN_G
+    if gpad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gpad), (0, 0)))
+    dpad = (-d) % LANE
+    if dpad:
+        scale_fix = jnp.asarray(((d + dpad) / d) ** 0.5, q.dtype)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, dpad))) * scale_fix
+        k_pages = jnp.pad(k_pages, ((0, 0), (0, 0), (0, 0), (0, dpad)))
+        v_pages = jnp.pad(v_pages, ((0, 0), (0, 0), (0, 0), (0, dpad)))
+
+    out = paged_attention_kernel(
+        qg, k_pages, v_pages, page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+        interpret=interpret,
+    )
+    return out[:, :, :g, :d].reshape(b, hq, d)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for paged decode attention: materialize pages densely,
+then run masked single-token attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """pages: (Hkv, P, ps, d); page_table: (B, pp) -> dense (B, Hkv, pp*ps, d)."""
+    hkv, _, ps, d = pages.shape
+    b, pp = page_table.shape
+    g = pages[:, page_table]  # (Hkv, B, pp, ps, d)
+    return g.transpose(1, 0, 2, 3, 4).reshape(b, hkv, pp * ps, d)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """q: (B, Hq, d); pages: (Hkv, P, ps, d); page_table: (B, pp); lengths: (B,).
+
+    Returns (B, Hq, d) f32-accurate decode attention over the first
+    ``lengths[b]`` tokens of each sequence.
+    """
+    b, hq, d = q.shape
+    hkv = k_pages.shape[0]
+    g = hq // hkv
+    k = gather_pages(k_pages, page_table).astype(jnp.float32)
+    v = gather_pages(v_pages, page_table).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k) / math.sqrt(d)
+    mask = jnp.arange(k.shape[2])[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v)
+    return o.reshape(b, hq, d).astype(q.dtype)

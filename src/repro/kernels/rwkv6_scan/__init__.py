@@ -1,0 +1,2 @@
+from repro.kernels.rwkv6_scan.ops import wkv6_chunked  # noqa: F401
+from repro.kernels.rwkv6_scan.ref import wkv6_ref  # noqa: F401

@@ -1,0 +1,106 @@
+"""Chunked WKV6 Pallas TPU kernel (RWKV6 linear attention, per-channel decay).
+
+Per (batch, head) the sequence is processed in chunks of C tokens with the
+cross-chunk state S (hd x hd) carried in VMEM scratch. Within a chunk the
+recurrence is closed-form:
+
+  ce[t]  = sum_{i<t} lw[i]          (exclusive log-decay cumsum, per channel)
+  cwi[s] = sum_{i<=s} lw[i]         (inclusive)
+  A[t,s] = sum_k r[t,k] k[s,k] exp(ce[t,k] - cwi[s,k])      (s < t, intra)
+  A[t,t] = sum_k r[t,k] u[k] k[t,k]                          (bonus diag)
+  y      = A @ v + (r * exp(ce)) @ S_in
+  S_out  = diag(exp(cwi[C-1])) S_in + (k * exp(cwi[C-1] - cwi))^T @ v
+
+Every exponent is <= 0 (lw <= 0), so no overflow for arbitrarily strong
+data-dependent decay — this is why the kernel materializes the (C, C, hd)
+decay tensor instead of the r~/k~ factorization, trading VMEM (C^2*hd f32;
+1 MiB at C=64, hd=64) for unconditional numerical safety. Grid
+(B, H, T/C) with the chunk axis innermost (sequential state carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sout_ref, s_ref):
+    t_idx = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (hd,)
+    c, hd = r.shape
+
+    cwi = jnp.cumsum(lw, axis=0)  # inclusive (C, hd)
+    ce = cwi - lw  # exclusive
+
+    # intra-chunk: (C, C, hd) decay tensor, all exponents <= 0
+    e = jnp.exp(ce[:, None, :] - cwi[None, :, :])  # (t, s, k)
+    p = jnp.sum(r[:, None, :] * k[None, :, :] * e, axis=-1)  # (t, s)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    p = jnp.where(si < ti, p, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (C,)
+    a = p + jnp.where(si == ti, diag[:, None], 0.0)
+    y = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # carry-in contribution + state update
+    s_in = s_ref[...]  # (hd_k, hd_v)
+    y = y + jax.lax.dot_general(
+        r * jnp.exp(ce), s_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    decay_tail = jnp.exp(cwi[-1][None, :] - cwi)  # (C, hd)
+    s_new = jnp.exp(cwi[-1])[:, None] * s_in + jax.lax.dot_general(
+        (k * decay_tail), v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(t_idx == nt - 1)
+    def _final():
+        sout_ref[0, 0] = s_new.astype(sout_ref.dtype)
+
+
+def wkv6_chunked_kernel(r, k, v, lw, u, s0, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/lw: (B, H, T, hd); u: (H, hd); s0: (B, H, hd, hd).
+
+    Returns (y (B,H,T,hd) f32, s_out (B,H,hd,hd) f32). T % chunk == 0.
+    """
+    b, h, t, hd = r.shape
+    assert t % chunk == 0, (t, chunk)
+    grid = (b, h, t // chunk)
+
+    chunk_spec = pl.BlockSpec((1, 1, chunk, hd), lambda bb, hh, tt: (bb, hh, tt, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            chunk_spec,
+            chunk_spec,
+            chunk_spec,
+            chunk_spec,
+            pl.BlockSpec((1, hd), lambda bb, hh, tt: (hh, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda bb, hh, tt: (bb, hh, 0, 0)),
+        ],
+        out_specs=[
+            chunk_spec,
+            pl.BlockSpec((1, 1, hd, hd), lambda bb, hh, tt: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u, s0)

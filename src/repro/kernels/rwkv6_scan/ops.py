@@ -1,0 +1,34 @@
+"""Public WKV6 op: layout transpose, chunk padding, state threading."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import wkv6_chunked_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked(r, k, v, lw, u, state=None, *, chunk: int = 64, interpret: bool = True):
+    """Model-layout WKV6: r/k/v/lw (B, T, H, hd); u (H, hd); state (B,H,hd,hd).
+
+    Returns (y (B,T,H,hd) f32, final_state). Pads T to a chunk multiple with
+    identity steps (w=1, k=v=r=0: no state change, no output contribution).
+    """
+    b, t, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    pad = (-t) % chunk
+
+    def to_bhtd(x, fill=0.0):
+        x = x.transpose(0, 2, 1, 3)  # (B,H,T,hd)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=fill)
+        return x.astype(jnp.float32)
+
+    y, s_out = wkv6_chunked_kernel(
+        to_bhtd(r), to_bhtd(k), to_bhtd(v), to_bhtd(lw), u.astype(jnp.float32),
+        state.astype(jnp.float32), chunk=min(chunk, t + pad), interpret=interpret,
+    )
+    return y[:, :, :t, :].transpose(0, 2, 1, 3), s_out

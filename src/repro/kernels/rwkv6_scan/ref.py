@@ -1,0 +1,28 @@
+"""Oracle: sequential WKV6 recurrence (same math as models/rwkv6.wkv6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, lw, u, state=None):
+    """r/k/v: (B, T, H, hd) f32; lw: log-decay (B, T, H, hd) (<= 0); u: (H, hd).
+
+    Returns (y (B,T,H,hd), final_state (B,H,hd,hd)).
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    """
+    b, t, h, hd = r.shape
+    w = jnp.exp(lw.astype(jnp.float32))
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,2 @@
+from repro.kernels.tiered_gather.ops import gather_rows, tiered_lookup  # noqa: F401
+from repro.kernels.tiered_gather.ref import gather_rows_ref, tiered_lookup_ref  # noqa: F401

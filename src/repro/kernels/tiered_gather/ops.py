@@ -1,0 +1,45 @@
+"""Public tiered-gather ops: lane padding + the two-tier composition."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiered_gather.kernel import gather_rows_kernel
+
+LANE = 128
+
+
+def _pad_lanes(x):
+    pad = (-x.shape[-1]) % LANE
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x, pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(src, ids, scales=None, *, interpret: bool = True):
+    """src: (M, D); ids: (N,) -> (N, D) f32 (dequantized if scales given)."""
+    d = src.shape[1]
+    srcp, _ = _pad_lanes(src)
+    sc = None if scales is None else scales.reshape(-1, 1).astype(jnp.float32)
+    out = gather_rows_kernel(srcp, ids.astype(jnp.int32), sc, interpret=interpret)
+    return out[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tiered_lookup(hot, cold_q, cold_scales, tier, slot, ids, *, interpret: bool = True):
+    """Two-tier lookup: near rows from ``hot`` (bf16/f32), far rows from the
+    int8 ``cold_q``+``cold_scales`` store, selected by ``tier``/``slot`` maps.
+
+    On real hardware the two gathers run on separate streams (HBM vs host
+    DMA); here both go through the kernel and are merged by tier mask.
+    """
+    s = slot[ids]
+    t = tier[ids]
+    hot_rows = gather_rows(hot, jnp.where(t == 0, s, 0), interpret=interpret)
+    cold_rows = gather_rows(
+        cold_q, jnp.where(t == 1, s, 0), cold_scales, interpret=interpret
+    )
+    return jnp.where((t == 0)[:, None], hot_rows, cold_rows)

@@ -1,0 +1,32 @@
+"""Oracles for the tiered row-gather kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(src, ids, scales=None):
+    """src: (M, D); ids: (N,) int32; scales: optional (M,) row scales.
+
+    Returns (N, D) f32: src[ids] (dequantized by scales if given).
+    """
+    rows = src[ids].astype(jnp.float32)
+    if scales is not None:
+        rows = rows * scales[ids].astype(jnp.float32)[:, None]
+    return rows
+
+
+def tiered_lookup_ref(hot, cold_q, cold_scales, tier, slot, ids):
+    """Two-tier lookup oracle.
+
+    hot: (Mh, D) bf16/f32 near-tier rows; cold_q: (Mc, D) int8 far-tier rows
+    with per-row ``cold_scales`` (Mc,); ``tier[id]`` in {0=hot, 1=cold};
+    ``slot[id]`` = row within its tier. Returns (N, D) f32.
+    """
+    s = slot[ids]
+    t = tier[ids]
+    h = hot[jnp.where(t == 0, s, 0)].astype(jnp.float32)
+    c = cold_q[jnp.where(t == 1, s, 0)].astype(jnp.float32) * cold_scales[
+        jnp.where(t == 1, s, 0)
+    ].astype(jnp.float32)[:, None]
+    return jnp.where((t == 0)[:, None], h, c)

@@ -1,0 +1,5 @@
+"""Launch layer: mesh construction, multi-pod dry-run, roofline, drivers.
+
+``dryrun`` must be executed as ``python -m repro.launch.dryrun`` (it sets
+XLA_FLAGS before importing jax); nothing imports it from library code.
+"""

@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices. Nothing
+here allocates real data — inputs are ShapeDtypeStructs and only
+``.lower().compile()`` runs.
+
+Per cell this records, to ``experiments/dryrun/<mesh>/<arch>__<shape>.json``:
+  * ``memory_analysis()``  -> per-device argument/output/temp/peak bytes
+                              (proves the cell fits 16 GiB HBM per chip);
+  * ``cost_analysis()``    -> per-device HLO FLOPs and bytes accessed;
+  * collective bytes       -> parsed from the post-SPMD HLO text
+                              (``hlo_analysis``: trip-counted through scans);
+  * the three roofline terms (``launch/roofline.py``).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single        # 40 cells
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi         # pod axis
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs, skipped_shapes
+from repro.core import hw, pooling
+from repro.launch import hlo_analysis, roofline as rl
+from repro.launch.mesh import activate, make_production_mesh, spec as mk_spec
+from repro.models.api import get_model, make_prefill_step, make_serve_step, make_train_step
+from repro.optim import AdamWConfig, adamw_init
+
+HBM_BUDGET = hw.HBM_BYTES
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+
+
+def _fit_spec(spec_tuple, aval, mesh) -> P:
+    """PartitionSpec for one leaf: drop axes absent from the mesh or not
+    dividing the dimension (e.g. batch=1 on a 16-way data axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, a in enumerate(tuple(spec_tuple)):
+        if a is None or i >= len(aval.shape):
+            out.append(None)
+            continue
+        parts = a if isinstance(a, tuple) else (a,)
+        kept = tuple(n for n in parts if n in sizes)
+        total = 1
+        for n in kept:
+            total *= sizes[n]
+        if not kept or aval.shape[i] % total != 0:
+            out.append(None)
+        else:
+            out.append(kept if isinstance(a, tuple) else kept[0])
+    return P(*out)
+
+
+def tree_shardings(mesh, specs, avals):
+    """NamedShardings for a pytree of spec-tuples against abstract values."""
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, _fit_spec(s, a, mesh)),
+        specs,
+        avals,
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            x is None or isinstance(x, (str, tuple)) for x in s
+        ),
+    )
+
+
+def _spec_like(avals, spec_fn):
+    """Build a spec tree with the same structure as ``avals``."""
+    return jax.tree.map(spec_fn, avals)
+
+
+def _as_bf16(avals):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+        if jnp.issubdtype(a.dtype, jnp.floating)
+        else a,
+        avals,
+    )
+
+
+# ---------------------------------------------------------------------------
+# one cell
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds_lower: float = 0.0
+    seconds_compile: float = 0.0
+    memory: Optional[dict] = None
+    cost: Optional[dict] = None
+    collectives: Optional[dict] = None
+    roofline: Optional[dict] = None
+    error: Optional[str] = None
+    pooled: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _attn_kernel_bytes(cfg, sh, *, model_axis: int = 16, dp: int = 16) -> float:
+    """Per-device HBM bytes of the Pallas flash kernel for this cell.
+
+    The kernel streams q/k/v once and writes o (fwd); the backward re-reads
+    q/k/v/o/do and writes dq/dk/dv; under remat the forward runs twice. All
+    score/prob traffic stays in VMEM — that is the kernel's entire point and
+    the delta vs. the reference HLO's tagged traffic.
+    """
+    if cfg.family == "ssm" or sh.kind == "decode":
+        return 0.0  # no chunked-attention region in these cells
+    heads_shard = model_axis if (cfg.n_heads % model_axis == 0 and cfg.n_kv_heads % model_axis == 0) else 1
+    b_dev = max(sh.global_batch // dp, 1)
+    L = sh.seq_len
+    hd = cfg.head_dim
+    qb = b_dev * (cfg.n_heads // heads_shard) * L * hd * 2.0  # bf16
+    kb = b_dev * (cfg.n_kv_heads // heads_shard) * L * hd * 2.0
+    n_attn_layers = cfg.n_layers if cfg.family != "hybrid" else max(
+        cfg.n_layers // max(cfg.shared_attn_every, 1), 1
+    )
+    fwd = qb + 2 * kb + qb  # q + k + v + o
+    if sh.kind == "train":
+        bwd = 2 * (qb + 2 * kb) + 2 * qb + (qb + 2 * kb)  # reads + do/o + grads
+        per_layer = 2 * fwd + bwd  # remat: fwd twice
+    else:
+        per_layer = fwd
+    return n_attn_layers * per_layer
+
+
+def _collect_params_shardings(api, mesh, pool: int, serve: bool):
+    """(abstract_params, shardings, storage_specs). Serve cells use bf16."""
+    cfg = api.cfg
+    aparams = api.abstract_params()
+    if serve:
+        aparams = _as_bf16(aparams)
+    specs = api.param_specs()
+    if pool > 1:
+        specs = pooling.pooled_specs(specs, aparams, mesh)
+    return aparams, tree_shardings(mesh, specs, aparams), specs
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, interactive_log=print) -> CellResult:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    if sh.kind != "train" and cfg.sp_activations:
+        # SP residuals + SP-native attention are a TRAINING memory feature
+        # (they shrink remat stacks); serving has no remat stacks and is
+        # better off with plain TP attention (head-sharded KV compute).
+        cfg = dataclasses.replace(cfg, sp_activations=False)
+    api = get_model(cfg)
+    # the paper's weight pooling (ZeRO over the pool axis, per-layer JIT
+    # gather inside the scan) — on for archs whose param+optimizer state
+    # exceeds per-chip HBM under pure TP (the shared-L2 "apparent capacity").
+    pool = cfg.pooling_cluster if cfg.pooling_cluster > 1 else 0
+    mesh = make_production_mesh(multi_pod=multi_pod, pool=pool)
+    mesh_name = "pod2" if multi_pod else "pod1"
+    res = CellResult(arch, shape_name, mesh_name, ok=False, pooled=pool)
+    t0 = time.time()
+    try:
+        with activate(mesh):
+            if sh.kind == "train":
+                aparams, p_sh, p_specs = _collect_params_shardings(api, mesh, pool, serve=False)
+                aopt = jax.eval_shape(adamw_init, aparams)
+                o_sh = {
+                    "m": p_sh,
+                    "v": p_sh,
+                    "step": NamedSharding(mesh, P()),
+                }
+                abatch = api.input_specs(shape_name)
+                b_sh = tree_shardings(mesh, api.batch_specs(shape_name), abatch)
+                step = make_train_step(api, AdamWConfig(), storage_specs=p_specs)
+                jfn = jax.jit(
+                    step,
+                    in_shardings=(p_sh, o_sh, b_sh),
+                    out_shardings=(p_sh, o_sh, None),
+                    donate_argnums=(0, 1),
+                )
+                t0 = time.time()
+                lowered = jfn.lower(aparams, aopt, abatch)
+            elif sh.kind == "prefill":
+                aparams, p_sh, _ = _collect_params_shardings(api, mesh, pool, serve=True)
+                abatch = api.input_specs(shape_name)
+                b_sh = tree_shardings(mesh, api.batch_specs(shape_name), abatch)
+                step = make_prefill_step(api, max_len=sh.seq_len)
+                jfn = jax.jit(step, in_shardings=(p_sh, b_sh))
+                t0 = time.time()
+                lowered = jfn.lower(aparams, abatch)
+            else:  # decode
+                aparams, p_sh, _ = _collect_params_shardings(api, mesh, pool, serve=True)
+                specs = api.input_specs(shape_name)
+                acache, atoks = specs["cache"], specs["tokens"]
+                cache_sh = tree_shardings(mesh, api.cache_specs(), acache)
+                tok_sh = tree_shardings(
+                    mesh, api.batch_specs(shape_name)["tokens"], atoks
+                )
+                step = make_serve_step(api)
+                jfn = jax.jit(
+                    step,
+                    in_shardings=(p_sh, cache_sh, tok_sh),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(1,),
+                )
+                t0 = time.time()
+                lowered = jfn.lower(aparams, acache, atoks)
+            res.seconds_lower = time.time() - t0
+
+            t1 = time.time()
+            compiled = lowered.compile()
+            res.seconds_compile = time.time() - t1
+
+            ma = compiled.memory_analysis()
+            res.memory = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_bytes": int(
+                    ma.argument_size_in_bytes
+                    + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes
+                    - ma.alias_size_in_bytes
+                ),
+                "hbm_budget": int(HBM_BUDGET),
+            }
+            res.memory["fits"] = res.memory["peak_bytes"] <= HBM_BUDGET
+            ca = compiled.cost_analysis() or {}
+            flops = float(ca.get("flops", 0.0))
+            bytes_ = float(ca.get("bytes accessed", 0.0))
+            res.cost = {"flops": flops, "bytes_accessed": bytes_}
+
+            hlo = compiled.as_text()
+            chips = mesh.devices.size
+            cost = hlo_analysis.analyze(hlo, total_devices=chips)
+            res.collectives = {
+                "total_bytes": float(cost.total_collective_bytes),
+                "by_kind_bytes": {k: float(v) for k, v in cost.collective_bytes.items()},
+                "op_counts": {k: int(v) for k, v in cost.collective_ops.items()},
+                "group_sizes": {k: float(v) for k, v in cost.group_sizes.items()},
+                "hlo_flops_model": float(cost.flops),
+                "hlo_bytes_model": float(cost.bytes),
+            }
+
+            n_tokens = sh.global_batch * (sh.seq_len if sh.kind in ("train", "prefill") else 1)
+            # primary FLOP/byte source: the trip-counted HLO walk. XLA's own
+            # cost_analysis() visits while bodies once, so an 80-layer scan
+            # under-reports by 80x; both are recorded, the walk drives terms.
+            terms = rl.roofline(
+                flops=cost.flops or flops,
+                bytes_=cost.bytes or bytes_,
+                cost=cost,
+                n_params=float(
+                    cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+                ),
+                n_tokens=float(n_tokens),
+                chips=chips,
+                kind="train" if sh.kind == "train" else "serve",
+                attn_ref_bytes=float(cost.tagged_bytes.get("flash_attention_ref", 0.0)),
+                attn_kernel_bytes=_attn_kernel_bytes(cfg, sh),
+            )
+            res.roofline = terms.as_dict()
+            res.roofline["roofline_fraction"] = rl.roofline_fraction(terms)
+            res.ok = True
+            interactive_log(
+                f"[{mesh_name}] {arch} x {shape_name}: "
+                f"lower {res.seconds_lower:.1f}s compile {res.seconds_compile:.1f}s "
+                f"peak {res.memory['peak_bytes']/2**30:.2f} GiB "
+                f"({'fits' if res.memory['fits'] else 'OVER'}) | "
+                + rl.format_row("", terms)
+            )
+    except Exception as e:  # noqa: BLE001 — recorded, the driver continues
+        res.error = f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=8)}"
+        interactive_log(f"[{mesh_name}] {arch} x {shape_name}: FAILED {type(e).__name__}: {e}")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+def all_cells():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            yield arch, shape
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", help="arch id (repeatable); default all")
+    ap.add_argument("--shape", action="append", help="shape name (repeatable); default all applicable")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cells that already have a JSON")
+    args = ap.parse_args(argv)
+
+    cells = [
+        (a, s)
+        for a, s in all_cells()
+        if (not args.arch or a in args.arch) and (not args.shape or s in args.shape)
+    ]
+    if args.list:
+        for a, s in cells:
+            print(f"{a:24s} {s}")
+        skips = {
+            a: skipped_shapes(get_config(a)) for a in list_archs() if skipped_shapes(get_config(a))
+        }
+        print(f"\n{len(cells)} cells; skips per assignment rules:")
+        for a, sk in skips.items():
+            for s, why in sk.items():
+                print(f"  {a:24s} {s}: {why}")
+        return 0
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for multi in meshes:
+        mesh_dir = os.path.join(args.out, "pod2" if multi else "pod1")
+        os.makedirs(mesh_dir, exist_ok=True)
+        for arch, shape in cells:
+            path = os.path.join(mesh_dir, f"{arch}__{shape}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {path} exists")
+                continue
+            res = run_cell(arch, shape, multi)
+            with open(path, "w") as f:
+                json.dump(res.as_dict(), f, indent=1)
+            n_fail += 0 if res.ok else 1
+    print(f"done; {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,139 @@
+"""Mesh construction + sharding-constraint helpers.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Models call ``shard(x, ...)`` which is a no-op unless a
+mesh has been activated — so the same model code runs on 1 CPU device in
+tests and on the 512-chip production mesh in the dry-run/launcher.
+
+Axis convention:
+  single-pod : (data=16, model=16)            axes ("data", "model")
+  multi-pod  : (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+``pod`` is the outer data-parallel axis (gradient all-reduce crosses DCI);
+``BATCH`` below shards over ("pod", "data") when both exist.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, tuple, None]
+
+# canonical logical axes used throughout the model code
+BATCH = ("pod", "data", "pool")  # batch / data-parallel (pool is inner DP)
+MODEL = "model"  # tensor-parallel
+POOL = "pool"  # weight-pooling cluster (shared-L2 analogue) — ZeRO shard axis
+
+
+def make_production_mesh(*, multi_pod: bool = False, pool: int = 0) -> Mesh:
+    """Production mesh: 256 chips/pod as (data=16, model=16); 2 pods = 512.
+
+    ``pool=k`` factors the data axis into (data=16/k, pool=k): a k-device
+    weight-pooling cluster (the paper's k-core shared-L2 cluster). Batch
+    shards over (pod, data, pool) either way, so total DP is unchanged.
+    """
+    if pool:
+        assert 16 % pool == 0, pool
+        shape = (2, 16 // pool, pool, 16) if multi_pod else (16 // pool, pool, 16)
+        axes = ("pod", "data", "pool", "model") if multi_pod else ("data", "pool", "model")
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# active-mesh context (thread-local; no global jax state)
+
+_local = threading.local()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_local, "mesh", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh]):
+    prev = active_mesh()
+    _local.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _local.mesh = prev
+
+
+def _filter_spec(axes: Sequence[AxisName], mesh: Mesh) -> P:
+    names = set(mesh.axis_names)
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif isinstance(a, tuple):
+            kept = tuple(n for n in a if n in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(a if a in names else None)
+    return P(*out)
+
+
+def spec(*axes: AxisName, mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec with axes not present in the mesh dropped."""
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        return P(*axes)
+    return _filter_spec(axes, mesh)
+
+
+def shard(x: jax.Array, *axes: AxisName) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, else identity.
+
+    Divisibility-aware: any requested axis whose size does not divide the
+    corresponding array dimension is dropped (e.g. 15 query heads on a 16-way
+    model axis stay replicated rather than erroring).
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    names = set(mesh.axis_names)
+    out = []
+    for i, a in enumerate(axes):
+        if a is None or i >= x.ndim:
+            out.append(None)
+            continue
+        parts = a if isinstance(a, tuple) else (a,)
+        kept = tuple(n for n in parts if n in names)
+        total = 1
+        for n in kept:
+            total *= sizes[n]
+        if not kept or total == 0 or x.shape[i] % total != 0:
+            out.append(None)
+        else:
+            out.append(kept if isinstance(a, tuple) else kept[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))
+
+
+def named(mesh: Mesh, *axes: AxisName) -> NamedSharding:
+    return NamedSharding(mesh, _filter_spec(axes, mesh))
+
+
+def tree_shardings(mesh: Mesh, specs) -> "jax.tree_util.PyTreeDef":
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _filter_spec(tuple(s), mesh)),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

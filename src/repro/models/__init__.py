@@ -1,0 +1,1 @@
+from repro.models.api import ModelAPI, get_model, make_prefill_step, make_serve_step, make_train_step  # noqa: F401

@@ -1,0 +1,173 @@
+"""Mamba2 (SSD) block — state-space core used by the zamba2 hybrid.
+
+Selective state-space recurrence per head (P = head dim, N = state dim):
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * x_t B_t^T        S: (P, N)
+    y_t = S_t C_t + D_h x_t
+
+with a causal depthwise conv in front of (x, B, C) and a gated RMSNorm after.
+jnp path scans over time; kernels/mamba2_scan holds the chunked Pallas kernel
+with this as oracle. Decode state is O(1): (conv tail, SSM state).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import BATCH, MODEL, shard
+from repro.models import common
+
+Array = jax.Array
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def init_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, ns = dims(cfg)
+    conv_dim = d_in + 2 * ns
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_in": common.dense_init(ks[0], (d, 2 * d_in + 2 * ns + nh), dtype=dtype),
+        "conv_w": common.dense_init(ks[1], (cfg.ssm_conv, conv_dim), dtype=jnp.float32, scale=1.0),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_out": common.dense_init(
+            ks[2], (d_in, d), scale=1.0 / (2 * max(cfg.n_layers, 1)) ** 0.5, dtype=dtype
+        ),
+    }
+
+
+def block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln": (None,),
+        "w_in": (None, MODEL),
+        "conv_w": (None, MODEL),
+        "conv_b": (MODEL,),
+        "A_log": (MODEL,),
+        "D": (MODEL,),
+        "dt_bias": (MODEL,),
+        "norm_w": (MODEL,),
+        "w_out": (MODEL, None),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tail: Optional[Array] = None):
+    """Depthwise causal conv. x: (B,T,C); w: (K,C); tail: (B,K-1,C) carry-in.
+
+    Returns (y (B,T,C), new_tail (B,K-1,C)).
+    """
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, T+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)) + b
+    return y, xp[:, -(k - 1) :, :] if k > 1 else jnp.zeros_like(tail)
+
+
+def _ssd_seq(state, x, dt, A, B, C):
+    """Per-token SSD over (b,T,...) inputs from ``state``."""
+
+    def step(s, inp):
+        x_t, dt_t, b_t, c_t = inp  # (b,H,P), (b,H), (b,N), (b,N)
+        da = jnp.exp(dt_t * A)  # (b,H), A<0 so da in (0,1)
+        s = s * da[..., None, None] + (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        B.transpose(1, 0, 2),
+        C.transpose(1, 0, 2),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return state, ys.transpose(1, 0, 2, 3)
+
+
+def ssd_scan(x, dt, A, B, C, D, state=None, chunk: int = 128):
+    """Chunked SSD. x: (b,T,H,P); dt: (b,T,H); A,D: (H,); B,C: (b,T,N).
+
+    Returns (y (b,T,H,P), final_state (b,H,P,N)). All f32. Chunking +
+    checkpointed chunk bodies bound the backward pass to per-chunk state
+    saves (a plain per-token scan saves the (b,H,P,N) state at every step —
+    see models/rwkv6.wkv6 for the same fix, and kernels/mamba2_scan for the
+    Pallas dataflow this mirrors).
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+    if t <= chunk or t % chunk != 0:
+        state, ys = _ssd_seq(state, x, dt, A, B, C)
+        return ys + x * D[None, None, :, None], state
+
+    nc = t // chunk
+
+    def chunk_body(s, xs):
+        xc, dtc, bc, cc = xs
+        s, yc = _ssd_seq(s, xc, dtc, A, bc, cc)
+        return s, yc
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    xs = (
+        x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4),
+        dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3),
+        B.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3),
+        C.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(chunk_body, state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    return y + x * D[None, None, :, None], state
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    d_in, nh, ns = dims(cfg)
+    conv_dim = d_in + 2 * ns
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, ns), jnp.float32),
+    }
+
+
+def apply(p: dict, cfg: ModelConfig, x: Array, state: Optional[dict] = None):
+    p = common.constrain_tree(p, block_specs(cfg), common.dt(cfg.compute_dtype))
+    """Full mamba2 block (pre-norm, residual outside). x: (B,T,D).
+
+    Returns (out (B,T,D), new_state).
+    """
+    b, t, d = x.shape
+    d_in, nh, ns = dims(cfg)
+    hd = cfg.ssm_head_dim
+    if state is None:
+        state = init_state(cfg, b)
+
+    xn = common.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("btd,de->bte", xn, p["w_in"], preferred_element_type=jnp.float32)
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * ns], axis=-1)
+    conv_out, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, B, C = jnp.split(conv_out, [d_in, d_in + ns], axis=-1)
+    xs = shard(xs.reshape(b, t, nh, hd), BATCH, None, MODEL, None)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_scan(xs, dt, A, B, C, p["D"], state["ssm"])
+    y = y.reshape(b, t, d_in)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_w"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"], preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"conv": conv_tail, "ssm": ssm_state}

@@ -1,0 +1,358 @@
+"""Mixture-of-Experts LM (granite-moe / qwen2-moe).
+
+Routing is top-k with capacity-bounded dispatch. Two dispatch backends:
+
+* ``einsum`` — GShard-style one-hot dispatch/combine einsums. Partitions
+  robustly under GSPMD (the dispatch einsum becomes the all-to-all), but XLA
+  counts the one-hot matmuls as real FLOPs, inflating cost_analysis.
+* ``sort`` — sort token-slots by expert, scatter into an (E, C, D) buffer,
+  run the expert FFNs as one batched einsum, gather back. No fake FLOPs
+  (this is the beyond-paper §Perf candidate for compute-bound MoE cells).
+
+Expert sharding: expert-dim EP when n_experts % model_axis == 0, else the
+expert FFN hidden dim is sharded over MODEL (TP-for-MoE) — both granite (40)
+and qwen2-moe (60) take the TP path on a 16-way model axis. Router decisions
+double as the access stream for expert tiering (core/: the paper's hot-page
+skew shows up as routing skew).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import BATCH, MODEL, shard
+from repro.models import attention, common
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _init_layer(key, cfg: ModelConfig, dtype) -> dict:
+    ka, kr, ke, ks, kg = jax.random.split(key, 5)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p = {
+        "ln1": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "attn": attention.init(ka, cfg, dtype),
+        "router": common.dense_init(kr, (d, e), dtype=jnp.float32),
+        "experts": {
+            "w_gate": common.dense_init(k1, (e, d, f), in_axis=1, dtype=dtype),
+            "w_up": common.dense_init(k2, (e, d, f), in_axis=1, dtype=dtype),
+            "w_down": common.dense_init(
+                k3, (e, f, d), in_axis=1, scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype
+            ),
+        },
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        s1, s2, s3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "w_gate": common.dense_init(s1, (d, fs), dtype=dtype),
+            "w_up": common.dense_init(s2, (d, fs), dtype=dtype),
+            "w_down": common.dense_init(
+                s3, (fs, d), scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype
+            ),
+            "gate": common.dense_init(kg, (d, 1), dtype=dtype),
+        }
+    return p
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    dtype = common.dt(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(jax.random.split(kl, cfg.n_layers))
+    params = {
+        "embed": common.embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(kh, (cfg.d_model, cfg.padded_vocab), dtype=dtype)
+    return params
+
+
+def layer_specs(cfg: ModelConfig, model_axis: int = 16) -> dict:
+    ep = cfg.n_experts % model_axis == 0  # expert-parallel when divisible
+    if ep:
+        experts = {"w_gate": (MODEL, None, None), "w_up": (MODEL, None, None), "w_down": (MODEL, None, None)}
+    else:  # TP-for-MoE: shard the expert hidden dim
+        experts = {"w_gate": (None, None, MODEL), "w_up": (None, None, MODEL), "w_down": (None, MODEL, None)}
+    lyr = {
+        "ln1": (None,),
+        "ln2": (None,),
+        "attn": attention.param_specs(cfg),
+        "router": (None, None),
+        "experts": experts,
+    }
+    if cfg.n_shared_experts:
+        lyr["shared"] = {
+            "w_gate": (None, MODEL),
+            "w_up": (None, MODEL),
+            "w_down": (MODEL, None),
+            "gate": (None, None),
+        }
+    return lyr
+
+
+def param_specs(cfg: ModelConfig, model_axis: int = 16) -> dict:
+    lyr = jax.tree.map(
+        lambda s: (None,) + tuple(s), layer_specs(cfg, model_axis), is_leaf=lambda s: isinstance(s, tuple)
+    )
+    specs = {"embed": (MODEL, None), "layers": lyr, "final_norm": (None,)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = (None, MODEL)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# routing
+
+
+def _route(router_w: Array, cfg: ModelConfig, xg: Array):
+    """xg: (G, T, D) -> (topv, topi, probs). topv renormalized over top_k."""
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), router_w.astype(jnp.float32)
+    )  # (G,T,E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    return topv, topi, probs
+
+
+def aux_losses(probs: Array, topi: Array, cfg: ModelConfig):
+    """GShard load-balance loss + router z-loss. probs (G,T,E), topi (G,T,k)."""
+    e = cfg.n_experts
+    frac = jnp.mean(jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=(1, 2))  # (G,E)
+    imp = jnp.mean(probs, axis=1)  # (G,E)
+    lb = e * jnp.mean(jnp.sum(frac * imp, axis=-1))
+    return cfg.router_aux_coef * lb
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)
+
+
+def _expert_ffn(experts: dict, xs: Array) -> Array:
+    """xs: (G, E, C, D) -> (G, E, C, D)."""
+    g = jnp.einsum("gecd,edf->gecf", xs, experts["w_gate"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("gecd,edf->gecf", xs, experts["w_up"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(xs.dtype)
+    return jnp.einsum("gecf,efd->gecd", h, experts["w_down"], preferred_element_type=jnp.float32).astype(xs.dtype)
+
+
+def moe_einsum(p: dict, cfg: ModelConfig, xg: Array):
+    """GShard dispatch. xg: (G, T, D) -> (out, aux_loss)."""
+    gdim, t, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(t, cfg)
+    topv, topi, probs = _route(p["router"], cfg, xg)
+    oh = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (G,T,k,E)
+    # position of each slot within its expert: cumsum over (T,k) in slot order
+    ohf = oh.reshape(gdim, t * k, e)
+    pos = jnp.cumsum(ohf, axis=1) - ohf  # (G,T*k,E)
+    slot_pos = jnp.sum(pos * ohf, axis=-1).reshape(gdim, t, k)  # (G,T,k)
+    keep = (slot_pos < c).astype(jnp.float32)
+    cap_oh = jax.nn.one_hot(slot_pos.astype(jnp.int32), c, dtype=jnp.float32)  # (G,T,k,C)
+    disp = jnp.einsum("gtke,gtkc->gtec", oh * keep[..., None], cap_oh)  # (G,T,E,C)
+    comb = jnp.einsum("gtke,gtkc->gtec", (oh * (topv * keep)[..., None]), cap_oh)
+    xs = jnp.einsum(
+        "gtec,gtd->gecd", disp.astype(xg.dtype), xg, preferred_element_type=jnp.float32
+    ).astype(xg.dtype)
+    ys = _expert_ffn(p["experts"], xs)
+    out = jnp.einsum(
+        "gtec,gecd->gtd", comb.astype(ys.dtype), ys, preferred_element_type=jnp.float32
+    ).astype(xg.dtype)
+    return out, aux_losses(probs, topi, cfg)
+
+
+def moe_sort(p: dict, cfg: ModelConfig, xg: Array):
+    """Sort-based dispatch — no one-hot matmul FLOPs. xg: (G, T, D)."""
+    gdim, t, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(t, cfg)
+    topv, topi, probs = _route(p["router"], cfg, xg)
+
+    def one_group(x, ti, tv):
+        flat_e = ti.reshape(t * k)
+        flat_w = tv.reshape(t * k)
+        order = jnp.argsort(flat_e, stable=True)  # slots sorted by expert
+        se = flat_e[order]
+        counts = jnp.bincount(flat_e, length=e)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(t * k) - starts[se]
+        keep = pos < c
+        dest = jnp.where(keep, se * c + pos, e * c)  # drop slot -> scratch row
+        tok = order // k
+        buf = jnp.zeros((e * c + 1, d), x.dtype).at[dest].set(x[tok])
+        ys = _expert_ffn(
+            {k_: w[None] if w.ndim == 2 else w for k_, w in p["experts"].items()},
+            buf[: e * c].reshape(1, e, c, d),
+        )[0].reshape(e * c, d)
+        y_slot = ys[jnp.minimum(dest, e * c - 1)] * (keep * flat_w[order])[:, None].astype(x.dtype)
+        return jnp.zeros((t, d), x.dtype).at[tok].add(y_slot)
+
+    out = jax.vmap(one_group)(xg, topi, topv)
+    return out, aux_losses(probs, topi, cfg)
+
+
+def _shared_ffn(p: dict, x: Array) -> Array:
+    s = p["shared"]
+    gate = jax.nn.sigmoid(
+        jnp.einsum("gtd,do->gto", x.astype(jnp.float32), s["gate"].astype(jnp.float32))
+    )
+    y = common.swiglu(x, s["w_gate"], s["w_up"], s["w_down"])
+    return (y.astype(jnp.float32) * gate).astype(x.dtype)
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: Array, dispatch: Optional[str] = None):
+    """x: (B, S, D) -> (out, aux). Routed per batch row (group = row).
+
+    Long sequences are re-grouped to ``cfg.moe_group`` tokens per routing
+    group first: GShard capacity state is O(k * t^2) PER GROUP, so a 32k
+    prefill in one group is ~16x more dispatch state than 16 groups of 2k.
+    """
+    dispatch = dispatch or cfg.moe_dispatch
+    fn = moe_einsum if dispatch == "einsum" else moe_sort
+    g0, t0, d0 = x.shape
+    grp = cfg.moe_group
+    if grp and t0 > grp and t0 % grp == 0:
+        x = x.reshape(g0 * (t0 // grp), grp, d0)
+    out, aux = fn(p, cfg, x)
+    out = out.reshape(g0, t0, d0)
+    if cfg.n_shared_experts:
+        out = out + _shared_ffn(p, x.reshape(g0, t0, d0))
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# full LM (mirrors transformer.py; MLP -> MoE)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Optional[Array] = None,
+    embeds: Optional[Array] = None,
+    positions: Optional[Array] = None,
+    *,
+    remat: Optional[bool] = None,
+    block_k: int = 1024,
+    dispatch: Optional[str] = None,
+):
+    """Returns (logits, aux_loss_sum)."""
+    from repro.models import transformer as _t
+
+    h = _t._embed_in(params, cfg, tokens, embeds)
+    b, l, _ = h.shape
+    if positions is None:
+        positions = common.causal_positions(b, l)
+
+    def block(carry, layer):
+        h, aux = carry
+        layer = common.constrain_tree(layer, layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = common.rms_norm(h, layer["ln1"], cfg.norm_eps)
+        h = h + attention.apply_train(layer["attn"], cfg, x, positions, block_k=block_k)
+        x = common.rms_norm(h, layer["ln2"], cfg.norm_eps)
+        y, a = moe_ffn(layer, cfg, x, dispatch)
+        return (shard(h + y, BATCH, None, None), aux + a), None
+
+    use_remat = cfg.remat if remat is None else remat
+    blk = common.maybe_remat(lambda c, lp: block(c, lp)[0], use_remat, cfg.remat_policy)
+    (h, aux), _ = jax.lax.scan(lambda c, lp: (blk(c, lp), None), (h, jnp.zeros((), jnp.float32)), params["layers"])
+    return _t._logits_out(params, cfg, h), aux
+
+
+def features(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Optional[Array] = None,
+    embeds: Optional[Array] = None,
+    positions: Optional[Array] = None,
+    *,
+    remat: Optional[bool] = None,
+    block_k: int = 1024,
+    dispatch: Optional[str] = None,
+):
+    """Trunk -> (post-norm h, head weight, aux loss) for the fused CE path."""
+    from repro.models import transformer as _t
+
+    h = _t._embed_in(params, cfg, tokens, embeds)
+    b, l, _ = h.shape
+    if positions is None:
+        positions = common.causal_positions(b, l)
+
+    def block(carry, layer):
+        h, aux = carry
+        layer = common.constrain_tree(layer, layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = common.rms_norm(h, layer["ln1"], cfg.norm_eps)
+        h = h + attention.apply_train(layer["attn"], cfg, x, positions, block_k=block_k)
+        x = common.rms_norm(h, layer["ln2"], cfg.norm_eps)
+        y, a = moe_ffn(layer, cfg, x, dispatch)
+        return (shard(h + y, BATCH, None, None), aux + a), None
+
+    use_remat = cfg.remat if remat is None else remat
+    blk = common.maybe_remat(lambda c, lp: block(c, lp)[0], use_remat, cfg.remat_policy)
+    (h, aux), _ = jax.lax.scan(lambda c, lp: (blk(c, lp), None), (h, jnp.zeros((), jnp.float32)), params["layers"])
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, _t._head_w(params, cfg), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, *, max_len: int, block_k: int = 1024):
+    from repro.models import transformer as _t
+
+    h = _t._embed_in(params, cfg, tokens, embeds)
+    b, l, _ = h.shape
+    positions = common.causal_positions(b, l)
+
+    def block(h, layer):
+        layer = common.constrain_tree(layer, layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = common.rms_norm(h, layer["ln1"], cfg.norm_eps)
+        a, (kk, vv) = attention.apply_prefill(layer["attn"], cfg, x, positions, max_len, block_k=block_k)
+        h = h + a
+        x = common.rms_norm(h, layer["ln2"], cfg.norm_eps)
+        y, _ = moe_ffn(layer, cfg, x)
+        return shard(h + y, BATCH, None, None), (kk, vv)
+
+    h, (ks, vs) = jax.lax.scan(block, h, params["layers"])
+    cache = {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16), "lengths": jnp.full((b,), l, jnp.int32)}
+    return _t._logits_out(params, cfg, h), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens: Array):
+    from repro.models import transformer as _t
+
+    h = _t._embed_in(params, cfg, tokens)
+    lengths = cache["lengths"]
+    b = h.shape[0]
+
+    def step(h, xs):
+        layer, kc, vc = xs
+        layer = common.constrain_tree(layer, layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = common.rms_norm(h, layer["ln1"], cfg.norm_eps)
+        a, kc, vc = attention.apply_decode(layer["attn"], cfg, x, kc, vc, lengths)
+        h = h + a
+        x = common.rms_norm(h, layer["ln2"], cfg.norm_eps)
+        # decode: route the whole batch as one group (G=1, T=B)
+        y, _ = moe_ffn(layer, cfg, x.reshape(1, b, -1))
+        h = h + y.reshape(b, 1, -1)
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(step, h, (params["layers"], cache["k"], cache["v"]))
+    logits = _t._logits_out(params, cfg, h)
+    return logits, {"k": ks, "v": vs, "lengths": lengths + 1}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return attention.init_cache(cfg, cfg.n_layers, batch, max_len, dtype)
+
+
+def cache_specs(cfg: ModelConfig, model_axis: int = 16) -> dict:
+    return attention.cache_specs(cfg, model_axis)

@@ -1,0 +1,368 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay). arXiv:2404.05892.
+
+Time-mix: token-shift with LoRA-modulated per-channel interpolation, then the
+WKV6 recurrence per 64-wide head:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T        (data-dependent decay w_t)
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+Channel-mix: token-shift + squared-ReLU FFN with receptance gate.
+
+The jnp path scans over time (this file); kernels/rwkv6_scan holds the
+chunked Pallas TPU kernel with this as its oracle. Decode state is O(1):
+per layer (wkv state, att shift, cm shift) — which is exactly why this arch
+runs the long_500k cell and why the paper's KV tiering is inapplicable to it
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import BATCH, MODEL, shard
+from repro.models import common
+
+Array = jax.Array
+
+MIX_RANK = 32
+DECAY_RANK = 64
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.ssm_head_dim
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _init_layer(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.ssm_head_dim
+    h = _n_heads(cfg)
+    ks = jax.random.split(key, 12)
+    u = jnp.zeros((h, hd), jnp.float32) + 0.5
+    return {
+        "ln1": {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+        "ln2": {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+        "att": {
+            "maa_x": jnp.zeros((d,), jnp.float32),
+            "maa": jnp.zeros((5, d), jnp.float32),  # w,k,v,r,g
+            "maa_w1": common.dense_init(ks[0], (d, 5 * MIX_RANK), dtype=jnp.float32, scale=0.1),
+            "maa_w2": common.dense_init(ks[1], (5, MIX_RANK, d), in_axis=1, dtype=jnp.float32, scale=0.1),
+            "w0": jnp.full((d,), -6.0, jnp.float32),  # decay bias: slow decay default
+            "w1": common.dense_init(ks[2], (d, DECAY_RANK), dtype=jnp.float32, scale=0.1),
+            "w2": common.dense_init(ks[3], (DECAY_RANK, d), dtype=jnp.float32, scale=0.1),
+            "u": u,  # "time_faaaa" bonus
+            "wr": common.dense_init(ks[4], (d, d), dtype=dtype),
+            "wk": common.dense_init(ks[5], (d, d), dtype=dtype),
+            "wv": common.dense_init(ks[6], (d, d), dtype=dtype),
+            "wg": common.dense_init(ks[7], (d, d), dtype=dtype),
+            "wo": common.dense_init(ks[8], (d, d), scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+            "ln_x": {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)},
+        },
+        "ffn": {
+            "maa_k": jnp.zeros((d,), jnp.float32),
+            "maa_r": jnp.zeros((d,), jnp.float32),
+            "wk": common.dense_init(ks[9], (d, f), dtype=dtype),
+            "wv": common.dense_init(ks[10], (f, d), scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+            "wr": common.dense_init(ks[11], (d, d), dtype=dtype),
+        },
+    }
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    dtype = common.dt(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": common.embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),
+        "ln0": {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros((cfg.d_model,), dtype)},
+        "layers": layers,
+        "final_norm": {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros((cfg.d_model,), dtype)},
+        "lm_head": common.dense_init(kh, (cfg.d_model, cfg.padded_vocab), dtype=dtype),
+    }
+
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    rep1 = (None,)
+    return {
+        "ln1": {"w": rep1, "b": rep1},
+        "ln2": {"w": rep1, "b": rep1},
+        "att": {
+            "maa_x": rep1,
+            "maa": (None, None),
+            "maa_w1": (None, None),
+            "maa_w2": (None, None, None),
+            "w0": rep1,
+            "w1": (None, None),
+            "w2": (None, None),
+            "u": (MODEL, None),
+            "wr": (None, MODEL),
+            "wk": (None, MODEL),
+            "wv": (None, MODEL),
+            "wg": (None, MODEL),
+            "wo": (MODEL, None),
+            "ln_x": {"w": rep1, "b": rep1},
+        },
+        "ffn": {
+            "maa_k": rep1,
+            "maa_r": rep1,
+            "wk": (None, MODEL),
+            "wv": (MODEL, None),
+            "wr": (None, None),
+        },
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    rep1 = (None,)
+    lyr = jax.tree.map(
+        lambda s: (None,) + tuple(s), layer_specs(cfg), is_leaf=lambda s: isinstance(s, tuple)
+    )
+    return {
+        "embed": (MODEL, None),
+        "ln0": {"w": rep1, "b": rep1},
+        "layers": lyr,
+        "final_norm": {"w": rep1, "b": rep1},
+        "lm_head": (None, MODEL),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv6 recurrence (jnp oracle for kernels/rwkv6_scan)
+
+
+def _wkv6_seq(state, r, k, v, w, u):
+    """Per-token WKV6 over (B, T, H, hd) inputs from ``state``."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return state, ys.transpose(1, 0, 2, 3)
+
+
+def wkv6(
+    r: Array, k: Array, v: Array, w: Array, u: Array,
+    state: Optional[Array] = None, chunk: int = 128,
+):
+    """WKV6 as a chunked scan. r/k/v/w: (B, T, H, hd) f32, w in (0,1); u: (H, hd).
+
+    Returns (y (B,T,H,hd), final_state (B,H,hd,hd)). State axes: [k-dim, v-dim].
+
+    Training memory note: differentiating a plain per-token scan saves the
+    (B,H,hd,hd) state at EVERY step (T x 8 MB per layer at 4k — tens of GB).
+    Chunking + checkpointing the chunk body keeps only per-chunk states and
+    recomputes inside a chunk on the backward pass, mirroring the Pallas
+    kernel's chunked dataflow (kernels/rwkv6_scan).
+    """
+    b, t, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    if t <= chunk or t % chunk != 0:
+        state, ys = _wkv6_seq(state, r, k, v, w, u)
+        return ys, state
+
+    nc = t // chunk
+
+    def chunk_body(s, xs):
+        rc, kc, vc, wc = xs  # (B, C, H, hd)
+        s, yc = _wkv6_seq(s, rc, kc, vc, wc, u)
+        return s, yc
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    xs = tuple(
+        a.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4) for a in (r, k, v, w)
+    )
+    state, ys = jax.lax.scan(chunk_body, state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, hd)
+    return y, state
+
+
+def _token_shift(x: Array, prev: Array) -> Array:
+    """x: (B,T,D); prev: (B,D) last token of previous segment -> shifted x."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix(att: dict, cfg: ModelConfig, x: Array, shift_prev: Array, wkv_state):
+    """Returns (out (B,T,D), new_shift (B,D), new_wkv_state)."""
+    b, t, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    xf = x.astype(jnp.float32)
+    sx = _token_shift(xf, shift_prev) - xf  # (B,T,D)
+    xxx = xf + sx * att["maa_x"]
+    mix = jnp.tanh(xxx @ att["maa_w1"]).reshape(b, t, 5, MIX_RANK)  # (B,T,5,R)
+    mix = jnp.einsum("btfr,frd->fbtd", mix, att["maa_w2"])  # (5,B,T,D)
+    xw, xk, xv, xr, xg = [xf + sx * (att["maa"][i] + mix[i]) for i in range(5)]
+
+    dtype = x.dtype
+    r = (xr.astype(dtype) @ att["wr"]).astype(jnp.float32).reshape(b, t, h, hd)
+    k = (xk.astype(dtype) @ att["wk"]).astype(jnp.float32).reshape(b, t, h, hd)
+    v = (xv.astype(dtype) @ att["wv"]).astype(jnp.float32).reshape(b, t, h, hd)
+    g = jax.nn.silu((xg.astype(dtype) @ att["wg"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(att["w0"] + xw @ att["w1"] @ att["w2"]))  # (B,T,D) in (0,1)
+    w = w.reshape(b, t, h, hd)
+    r = shard(r, BATCH, None, MODEL, None)
+    k = shard(k, BATCH, None, MODEL, None)
+    v = shard(v, BATCH, None, MODEL, None)
+
+    y, wkv_state = wkv6(r, k, v, w, att["u"], wkv_state)  # (B,T,H,hd)
+    # per-head groupnorm, then gate and output proj
+    yf = y.reshape(b, t, h, hd)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, t, d)
+    yn = yn * att["ln_x"]["w"] + att["ln_x"]["b"]
+    out = ((yn * g).astype(dtype) @ att["wo"]).astype(dtype)
+    return out, xf[:, -1, :], wkv_state
+
+
+def _channel_mix(ffn: dict, cfg: ModelConfig, x: Array, shift_prev: Array):
+    xf = x.astype(jnp.float32)
+    sx = _token_shift(xf, shift_prev) - xf
+    xk = (xf + sx * ffn["maa_k"]).astype(x.dtype)
+    xr = (xf + sx * ffn["maa_r"]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ ffn["wk"]))
+    kv = (k @ ffn["wv"].astype(k.dtype)).astype(x.dtype)
+    gate = jax.nn.sigmoid((xr @ ffn["wr"]).astype(jnp.float32)).astype(x.dtype)
+    return gate * kv, xf[:, -1, :]
+
+
+def _block(layer, cfg: ModelConfig, h, att_shift, cm_shift, wkv_state):
+    # cast + re-pin TP layout per scanned slice: without the constraint GSPMD
+    # loses the spec through the scan transpose and replicates d(weights)
+    layer = common.constrain_tree(layer, layer_specs(cfg), common.dt(cfg.compute_dtype))
+    x = common.layer_norm(h, layer["ln1"]["w"], layer["ln1"]["b"], cfg.norm_eps)
+    a, att_shift, wkv_state = _time_mix(layer["att"], cfg, x, att_shift, wkv_state)
+    h = h + a
+    x = common.layer_norm(h, layer["ln2"]["w"], layer["ln2"]["b"], cfg.norm_eps)
+    m, cm_shift = _channel_mix(layer["ffn"], cfg, x, cm_shift)
+    h = shard(h + m, BATCH, None, None)
+    return h, att_shift, cm_shift, wkv_state
+
+
+def _embed(params, cfg, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(common.dt(cfg.compute_dtype))
+    h = common.layer_norm(h, params["ln0"]["w"], params["ln0"]["b"], cfg.norm_eps)
+    return shard(h, BATCH, None, None)
+
+
+def _logits(params, cfg, h):
+    h = common.layer_norm(h, params["final_norm"]["w"], params["final_norm"]["b"], cfg.norm_eps)
+    return shard(
+        jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype), preferred_element_type=jnp.float32),
+        BATCH, None, MODEL,
+    )
+
+
+# ---------------------------------------------------------------------------
+# public API
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None, *, remat=None, **_):
+    h = _embed(params, cfg, tokens) if embeds is None else embeds.astype(common.dt(cfg.compute_dtype))
+    b, t, d = h.shape
+    hd = cfg.ssm_head_dim
+
+    def block(h, layer):
+        z = jnp.zeros((b, d), jnp.float32)
+        s0 = jnp.zeros((b, d // hd, hd, hd), jnp.float32)
+        h, *_ = _block(layer, cfg, h, z, z, s0)
+        return h
+
+    use_remat = cfg.remat if remat is None else remat
+    blk = common.maybe_remat(block, use_remat, cfg.remat_policy)
+    h, _ = jax.lax.scan(lambda c, lp: (blk(c, lp), None), h, params["layers"])
+    return _logits(params, cfg, h)
+
+
+def features(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None, *, remat=None, **_):
+    """Trunk -> (post-norm h, lm_head weight) for the fused CE path."""
+    h = _embed(params, cfg, tokens) if embeds is None else embeds.astype(common.dt(cfg.compute_dtype))
+    b, t, d = h.shape
+    hd = cfg.ssm_head_dim
+
+    def block(h, layer):
+        z = jnp.zeros((b, d), jnp.float32)
+        s0 = jnp.zeros((b, d // hd, hd, hd), jnp.float32)
+        h, *_ = _block(layer, cfg, h, z, z, s0)
+        return h
+
+    use_remat = cfg.remat if remat is None else remat
+    blk = common.maybe_remat(block, use_remat, cfg.remat_policy)
+    h, _ = jax.lax.scan(lambda c, lp: (blk(c, lp), None), h, params["layers"])
+    h = common.layer_norm(h, params["final_norm"]["w"], params["final_norm"]["b"], cfg.norm_eps)
+    return h, shard(params["lm_head"], None, MODEL)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    d, hd = cfg.d_model, cfg.ssm_head_dim
+    h = d // hd
+    del max_len  # O(1) state — the whole point
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
+        "att_shift": jnp.zeros((cfg.n_layers, batch, d), jnp.float32),
+        "cm_shift": jnp.zeros((cfg.n_layers, batch, d), jnp.float32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, model_axis: int = 16) -> dict:
+    return {
+        "wkv": (None, BATCH, MODEL, None, None),
+        "att_shift": (None, BATCH, None),
+        "cm_shift": (None, BATCH, None),
+        "lengths": (BATCH,),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, *, max_len: int = 0, **_):
+    """Forward that also returns the recurrent state as the 'cache'."""
+    h = _embed(params, cfg, tokens) if embeds is None else embeds.astype(common.dt(cfg.compute_dtype))
+    b, t, d = h.shape
+    hd = cfg.ssm_head_dim
+
+    def block(h, layer):
+        z = jnp.zeros((b, d), jnp.float32)
+        s0 = jnp.zeros((b, d // hd, hd, hd), jnp.float32)
+        h, a_s, c_s, s = _block(layer, cfg, h, z, z, s0)
+        return h, (a_s, c_s, s)
+
+    h, (a_s, c_s, s) = jax.lax.scan(block, h, params["layers"])
+    cache = {
+        "wkv": s,
+        "att_shift": a_s,
+        "cm_shift": c_s,
+        "lengths": jnp.full((b,), t, jnp.int32),
+    }
+    return _logits(params, cfg, h), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens: Array):
+    h = _embed(params, cfg, tokens)  # (B,1,D)
+    b = h.shape[0]
+
+    def step(h, xs):
+        layer, a_s, c_s, s = xs
+        h, a_s, c_s, s = _block(layer, cfg, h, a_s, c_s, s)
+        return h, (a_s, c_s, s)
+
+    h, (a_s, c_s, s) = jax.lax.scan(
+        step, h, (params["layers"], cache["att_shift"], cache["cm_shift"], cache["wkv"])
+    )
+    logits = _logits(params, cfg, h)
+    return logits, {
+        "wkv": s,
+        "att_shift": a_s,
+        "cm_shift": c_s,
+        "lengths": cache["lengths"] + 1,
+    }

@@ -1,0 +1,46 @@
+"""Qwen2-VL-7B text backbone (M-RoPE). The vision tower is a stub: inputs are
+precomputed patch/token embeddings (B, S, D) + (3, B, S) M-RoPE position ids
+(temporal/height/width), per the assignment. Decode continues in text space
+(all three M-RoPE channels advance together, equivalent to 1-D RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def init(key, cfg: ModelConfig):
+    return transformer.init(key, cfg)
+
+
+def param_specs(cfg: ModelConfig):
+    return transformer.param_specs(cfg)
+
+
+def forward(params, cfg: ModelConfig, embeds, mrope_positions, **kw):
+    return transformer.forward(params, cfg, embeds=embeds, mrope_positions=mrope_positions, **kw)
+
+
+def features(params, cfg: ModelConfig, embeds, mrope_positions, **kw):
+    return transformer.features(params, cfg, embeds=embeds, mrope_positions=mrope_positions, **kw)
+
+
+def prefill(params, cfg: ModelConfig, embeds, mrope_positions, *, max_len: int, **kw):
+    return transformer.prefill(
+        params, cfg, embeds=embeds, mrope_positions=mrope_positions, max_len=max_len, **kw
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    # text-only continuation: t/h/w positions all equal the sequence index,
+    # which reduces M-RoPE to standard RoPE -> reuse the 1-D decode path.
+    return transformer.decode_step(params, cfg, cache, tokens)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def cache_specs(cfg: ModelConfig, model_axis: int = 16):
+    return transformer.cache_specs(cfg, model_axis)

@@ -1,0 +1,292 @@
+"""Whisper-base backbone: encoder-decoder transformer.
+
+The conv1d mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, n_audio_frames, D). Sinusoidal
+positions, LayerNorm + GELU MLP, bidirectional encoder self-attention,
+causal decoder self-attention + cross-attention. The cross-attention KV is
+computed once per request at prefill — in tiering terms it is a read-only
+hot page class for the whole decode (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import BATCH, MODEL, shard
+from repro.models import attention, common
+
+Array = jax.Array
+
+
+def _init_ln(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_mlp(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": common.dense_init(k1, (d, f), dtype=dtype),
+        "b_in": jnp.zeros((f,), dtype),
+        "w_out": common.dense_init(k2, (f, d), scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "attn": attention.init(ka, cfg, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "mlp": _init_mlp(km, cfg, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "self_attn": attention.init(ka, cfg, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "cross_attn": attention.init(kc, cfg, dtype),
+        "ln3": _init_ln(cfg.d_model, dtype),
+        "mlp": _init_mlp(km, cfg, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    dtype = common.dt(cfg.param_dtype)
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+        jax.random.split(kenc, cfg.n_encoder_layers)
+    )
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(jax.random.split(kdec, cfg.n_layers))
+    return {
+        "embed": common.embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),  # tied lm head
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": _init_ln(cfg.d_model, dtype),
+        "dec_norm": _init_ln(cfg.d_model, dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    mlp = {"w_in": (None, MODEL), "b_in": (MODEL,), "w_out": (MODEL, None), "b_out": (None,)}
+    ln = {"w": (None,), "b": (None,)}
+    enc = {"ln1": ln, "attn": attention.param_specs(cfg), "ln2": ln, "mlp": mlp}
+    dec = {
+        "ln1": ln,
+        "self_attn": attention.param_specs(cfg),
+        "ln2": ln,
+        "cross_attn": attention.param_specs(cfg),
+        "ln3": ln,
+        "mlp": mlp,
+    }
+    stack = lambda t: jax.tree.map(lambda s: (None,) + tuple(s), t, is_leaf=lambda s: isinstance(s, tuple))
+    return {
+        "embed": (MODEL, None),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "enc_norm": ln,
+        "dec_norm": ln,
+    }
+
+
+def enc_layer_specs(cfg: ModelConfig) -> dict:
+    mlp = {"w_in": (None, MODEL), "b_in": (MODEL,), "w_out": (MODEL, None), "b_out": (None,)}
+    ln = {"w": (None,), "b": (None,)}
+    return {"ln1": ln, "attn": attention.param_specs(cfg), "ln2": ln, "mlp": mlp}
+
+
+def dec_layer_specs(cfg: ModelConfig) -> dict:
+    mlp = {"w_in": (None, MODEL), "b_in": (MODEL,), "w_out": (MODEL, None), "b_out": (None,)}
+    ln = {"w": (None,), "b": (None,)}
+    return {
+        "ln1": ln,
+        "self_attn": attention.param_specs(cfg),
+        "ln2": ln,
+        "cross_attn": attention.param_specs(cfg),
+        "ln3": ln,
+        "mlp": mlp,
+    }
+
+
+def _ln(x, p, eps):
+    return common.layer_norm(x, p["w"], p["b"], eps)
+
+
+def _mlp(x, p):
+    return common.gelu_mlp(x, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+
+
+def encode(params, cfg: ModelConfig, frames: Array) -> Array:
+    """frames: (B, T_enc, D) precomputed embeddings (conv frontend stub)."""
+    dtype = common.dt(cfg.compute_dtype)
+    h = frames.astype(dtype) + common.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dtype)
+    h = shard(h, BATCH, None, None)
+    b, t, _ = h.shape
+    positions = common.causal_positions(b, t)
+
+    def block(h, layer):
+        layer = common.constrain_tree(layer, enc_layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = _ln(h, layer["ln1"], cfg.norm_eps)
+        q, k, v = attention._project_qkv(layer["attn"], cfg, x)
+        o = common.attention_chunked(q, k, v, causal=False, block_k=1024, bidirectional=True)
+        h = h + attention._out_proj(layer["attn"], h.dtype, o)
+        h = h + _mlp(_ln(h, layer["ln2"], cfg.norm_eps), layer["mlp"])
+        return shard(h, BATCH, None, None), None
+
+    h, _ = jax.lax.scan(block, h, params["enc_layers"])
+    return _ln(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(layer, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output: (B, Hkv, T_enc, hd)."""
+    b, t, _ = enc_out.shape
+    hd = cfg.head_dim
+    k = (enc_out @ layer["cross_attn"]["wk"]).reshape(b, t, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ layer["cross_attn"]["wv"]).reshape(b, t, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def _cross_attend(layer, cfg, x, ck, cv):
+    b, t, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ layer["cross_attn"]["wq"]).reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    o = common.attention_chunked(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False, bidirectional=True, block_k=1024)
+    return attention._out_proj(layer["cross_attn"], x.dtype, o)
+
+
+def forward(params, cfg: ModelConfig, tokens: Array, frames: Array, *, remat=None, **_):
+    """Teacher-forced decoder over encoder(frames). Returns logits (B,S,Vp)."""
+    enc_out = encode(params, cfg, frames)
+    dtype = common.dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    h = h + common.sinusoidal_positions(s, cfg.d_model).astype(dtype)
+    h = shard(h, BATCH, None, None)
+    positions = common.causal_positions(b, s)
+
+    def block(h, layer):
+        layer = common.constrain_tree(layer, dec_layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = _ln(h, layer["ln1"], cfg.norm_eps)
+        q, k, v = attention._project_qkv(layer["self_attn"], cfg, x)
+        o = common.attention_chunked(q, k, v, causal=True, block_k=1024)
+        h = h + attention._out_proj(layer["self_attn"], h.dtype, o)
+        ck, cv = _cross_kv(layer, cfg, enc_out)
+        h = h + _cross_attend(layer, cfg, _ln(h, layer["ln2"], cfg.norm_eps), ck, cv)
+        h = h + _mlp(_ln(h, layer["ln3"], cfg.norm_eps), layer["mlp"])
+        return shard(h, BATCH, None, None)
+
+    use_remat = cfg.remat if remat is None else remat
+    blk = common.maybe_remat(block, use_remat, cfg.remat_policy)
+    h, _ = jax.lax.scan(lambda c, lp: (blk(c, lp), None), h, params["dec_layers"])
+    h = _ln(h, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype), preferred_element_type=jnp.float32)
+    return shard(logits, BATCH, None, MODEL)
+
+
+def features(params, cfg: ModelConfig, tokens: Array, frames: Array, *, remat=None, **_):
+    """Trunk -> (post-norm h, tied lm_head weight (D,Vp)) for the fused CE."""
+    enc_out = encode(params, cfg, frames)
+    dtype = common.dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    h = h + common.sinusoidal_positions(s, cfg.d_model).astype(dtype)
+    h = shard(h, BATCH, None, None)
+    positions = common.causal_positions(b, s)
+
+    def block(h, layer):
+        layer = common.constrain_tree(layer, dec_layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = _ln(h, layer["ln1"], cfg.norm_eps)
+        q, k, v = attention._project_qkv(layer["self_attn"], cfg, x)
+        o = common.attention_chunked(q, k, v, causal=True, block_k=1024)
+        h = h + attention._out_proj(layer["self_attn"], h.dtype, o)
+        ck, cv = _cross_kv(layer, cfg, enc_out)
+        h = h + _cross_attend(layer, cfg, _ln(h, layer["ln2"], cfg.norm_eps), ck, cv)
+        h = h + _mlp(_ln(h, layer["ln3"], cfg.norm_eps), layer["mlp"])
+        return shard(h, BATCH, None, None)
+
+    use_remat = cfg.remat if remat is None else remat
+    blk = common.maybe_remat(block, use_remat, cfg.remat_policy)
+    h, _ = jax.lax.scan(lambda c, lp: (blk(c, lp), None), h, params["dec_layers"])
+    h = _ln(h, params["dec_norm"], cfg.norm_eps)
+    return h, params["embed"].T
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd), dtype),
+        "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, cfg.n_audio_frames, hd), dtype),
+        "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, cfg.n_audio_frames, hd), dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, model_axis: int = 16) -> dict:
+    kv = (None, BATCH, MODEL, None, None) if cfg.n_kv_heads % model_axis == 0 else (None, BATCH, None, MODEL, None)
+    return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv, "lengths": (BATCH,)}
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, frames: Array, *, max_len: int, **_):
+    """Encode audio + teacher-force the prompt tokens; build decoder caches."""
+    enc_out = encode(params, cfg, frames)
+    dtype = common.dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    h = h + common.sinusoidal_positions(s, cfg.d_model).astype(dtype)
+    positions = common.causal_positions(b, s)
+
+    def block(h, layer):
+        layer = common.constrain_tree(layer, dec_layer_specs(cfg), common.dt(cfg.compute_dtype))
+        x = _ln(h, layer["ln1"], cfg.norm_eps)
+        a, (k, v) = attention.apply_prefill(layer["self_attn"], cfg, x, positions, max_len)
+        h = h + a
+        ck, cv = _cross_kv(layer, cfg, enc_out)
+        h = h + _cross_attend(layer, cfg, _ln(h, layer["ln2"], cfg.norm_eps), ck, cv)
+        h = h + _mlp(_ln(h, layer["ln3"], cfg.norm_eps), layer["mlp"])
+        return shard(h, BATCH, None, None), (k, v, ck, cv)
+
+    h, (ks, vs, cks, cvs) = jax.lax.scan(block, h, params["dec_layers"])
+    h = _ln(h, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype), preferred_element_type=jnp.float32)
+    cache = {
+        "k": ks.astype(jnp.bfloat16),
+        "v": vs.astype(jnp.bfloat16),
+        "cross_k": cks.astype(jnp.bfloat16),
+        "cross_v": cvs.astype(jnp.bfloat16),
+        "lengths": jnp.full((b,), s, jnp.int32),
+    }
+    return shard(logits, BATCH, None, MODEL), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens: Array):
+    dtype = common.dt(cfg.compute_dtype)
+    b = tokens.shape[0]
+    lengths = cache["lengths"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    pe = common.sinusoidal_positions(cache["k"].shape[3], cfg.d_model).astype(dtype)
+    h = h + pe[lengths][:, None, :]
+
+    def step(h, xs):
+        layer, kc, vc, ck, cv = xs
+        x = _ln(h, layer["ln1"], cfg.norm_eps)
+        a, kc, vc = attention.apply_decode(layer["self_attn"], cfg, x, kc, vc, lengths)
+        h = h + a
+        h = h + _cross_attend(layer, cfg, _ln(h, layer["ln2"], cfg.norm_eps), ck, cv)
+        h = h + _mlp(_ln(h, layer["ln3"], cfg.norm_eps), layer["mlp"])
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(
+        step, h, (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"])
+    )
+    h = _ln(h, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype), preferred_element_type=jnp.float32)
+    new_cache = dict(cache, k=ks, v=vs, lengths=lengths + 1)
+    return shard(logits, BATCH, None, MODEL), new_cache

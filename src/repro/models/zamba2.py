@@ -1,0 +1,334 @@
+"""Zamba2 hybrid: Mamba2 backbone + a SHARED attention block applied every
+``shared_attn_every`` layers (arXiv:2411.15242).
+
+The shared block is one parameter set reused at every application depth —
+the model-level mirror of the paper's shared-L2 idea (identical content →
+one shared structure). Input to the shared block is concat(hidden, original
+embedding) (2*d), projected through attention (32 heads of 64) and a 2d->d_ff
+MLP back into the residual stream. Each application keeps its own KV cache
+(same params, different activations).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import BATCH, MODEL, shard
+from repro.models import common, mamba2
+
+Array = jax.Array
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def _is_attn_layer(cfg: ModelConfig, i) -> Array:
+    return (i % cfg.shared_attn_every) == cfg.shared_attn_every - 1
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _init_shared(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    u = 2 * d  # concat(hidden, embedding)
+    hd = cfg.head_dim  # 64
+    q_dim = cfg.n_heads * hd  # 2048
+    kv_dim = cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.ones((u,), dtype),
+        "wq": common.dense_init(ks[0], (u, q_dim), dtype=dtype),
+        "wk": common.dense_init(ks[1], (u, kv_dim), dtype=dtype),
+        "wv": common.dense_init(ks[2], (u, kv_dim), dtype=dtype),
+        "wo": common.dense_init(ks[3], (q_dim, d), scale=0.1, dtype=dtype),
+        "ln2": jnp.ones((u,), dtype),
+        "w_gate": common.dense_init(ks[4], (u, cfg.d_ff), dtype=dtype),
+        "w_up": common.dense_init(ks[5], (u, cfg.d_ff), dtype=dtype),
+        "w_down": common.dense_init(ks[6], (cfg.d_ff, d), scale=0.1, dtype=dtype),
+    }
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    dtype = common.dt(cfg.param_dtype)
+    ke, kl, ksh, kh = jax.random.split(key, 4)
+    layers = jax.vmap(lambda k: mamba2.init_block(k, cfg, dtype))(
+        jax.random.split(kl, cfg.n_layers)
+    )
+    return {
+        "embed": common.embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),
+        "layers": layers,
+        "shared": _init_shared(ksh, cfg, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": common.dense_init(kh, (cfg.d_model, cfg.padded_vocab), dtype=dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    lyr = jax.tree.map(
+        lambda s: (None,) + tuple(s), mamba2.block_specs(cfg), is_leaf=lambda s: isinstance(s, tuple)
+    )
+    return {
+        "embed": (MODEL, None),
+        "layers": lyr,
+        "shared": {
+            "ln1": (None,),
+            "wq": (None, MODEL),
+            "wk": (None, MODEL),
+            "wv": (None, MODEL),
+            "wo": (MODEL, None),
+            "ln2": (None,),
+            "w_gate": (None, MODEL),
+            "w_up": (None, MODEL),
+            "w_down": (MODEL, None),
+        },
+        "final_norm": (None,),
+        "lm_head": (None, MODEL),
+    }
+
+
+# ---------------------------------------------------------------------------
+# shared attention block
+
+
+def _shared_qkv(sh: dict, cfg: ModelConfig, u: Array, positions: Array):
+    b, t, _ = u.shape
+    hd = cfg.head_dim
+    un = common.rms_norm(u, sh["ln1"], cfg.norm_eps)
+    q = (un @ sh["wq"]).reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = (un @ sh["wk"]).reshape(b, t, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (un @ sh["wv"]).reshape(b, t, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, BATCH, MODEL, None, None)
+    k = shard(k, BATCH, MODEL, None, None)
+    return un, q, k, v
+
+
+def shared_specs(cfg: ModelConfig) -> dict:
+    return param_specs(cfg)["shared"]
+
+
+def shared_block_train(sh: dict, cfg: ModelConfig, h: Array, emb0: Array, positions: Array):
+    sh = common.constrain_tree(sh, shared_specs(cfg), common.dt(cfg.compute_dtype))
+    u = jnp.concatenate([h, emb0], axis=-1)
+    un, q, k, v = _shared_qkv(sh, cfg, u, positions)
+    o = common.attention_chunked(q, k, v, causal=True, block_k=1024)
+    b, hh, t, hd = o.shape
+    attn_out = (o.transpose(0, 2, 1, 3).reshape(b, t, hh * hd) @ sh["wo"]).astype(h.dtype)
+    h = h + attn_out
+    un2 = common.rms_norm(jnp.concatenate([h, emb0], axis=-1), sh["ln2"], cfg.norm_eps)
+    return h + common.swiglu(un2, sh["w_gate"], sh["w_up"], sh["w_down"])
+
+
+def shared_block_prefill(sh, cfg, h, emb0, positions, max_len: int):
+    u = jnp.concatenate([h, emb0], axis=-1)
+    un, q, k, v = _shared_qkv(sh, cfg, u, positions)
+    o = common.attention_chunked(q, k, v, causal=True, block_k=1024)
+    b, hh, t, hd = o.shape
+    h = h + (o.transpose(0, 2, 1, 3).reshape(b, t, hh * hd) @ sh["wo"]).astype(h.dtype)
+    un2 = common.rms_norm(jnp.concatenate([h, emb0], axis=-1), sh["ln2"], cfg.norm_eps)
+    h = h + common.swiglu(un2, sh["w_gate"], sh["w_up"], sh["w_down"])
+    pad = max_len - t
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad > 0 else k
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad > 0 else v
+    return h, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+
+def shared_block_decode(sh, cfg, h, emb0, k_cache, v_cache, lengths):
+    """h, emb0: (B,1,D); caches (B,Hkv,S,hd). Returns (h', k', v')."""
+    b = h.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)
+    u = jnp.concatenate([h, emb0], axis=-1)
+    un, q, k, v = _shared_qkv(sh, cfg, u, positions)
+    idx = jnp.arange(b)
+    k_cache = k_cache.at[idx, :, lengths, :].set(k[:, :, 0, :].astype(k_cache.dtype))
+    v_cache = v_cache.at[idx, :, lengths, :].set(v[:, :, 0, :].astype(v_cache.dtype))
+    o = common.attention_decode(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), lengths + 1)
+    hh, hd = o.shape[1], o.shape[3]
+    h = h + (o.transpose(0, 2, 1, 3).reshape(b, 1, hh * hd) @ sh["wo"]).astype(h.dtype)
+    un2 = common.rms_norm(jnp.concatenate([h, emb0], axis=-1), sh["ln2"], cfg.norm_eps)
+    h = h + common.swiglu(un2, sh["w_gate"], sh["w_up"], sh["w_down"])
+    return h, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+
+
+def _embed(params, cfg, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(common.dt(cfg.compute_dtype))
+    return shard(h, BATCH, None, None)
+
+
+def _logits(params, cfg, h):
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return shard(
+        jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype), preferred_element_type=jnp.float32),
+        BATCH, None, MODEL,
+    )
+
+
+def _split_groups(cfg: ModelConfig, tree):
+    """Stacked (L, ...) layer tree -> ((G, k, ...) grouped, (R, ...) tail)."""
+    k = cfg.shared_attn_every
+    g = cfg.n_layers // k
+    grouped = jax.tree.map(lambda x: x[: g * k].reshape((g, k) + x.shape[1:]), tree)
+    tail = jax.tree.map(lambda x: x[g * k :], tree)
+    return grouped, tail
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None, *, remat=None, **_):
+    h = _embed(params, cfg, tokens) if embeds is None else embeds.astype(common.dt(cfg.compute_dtype))
+    emb0 = h
+    b, t, d = h.shape
+    if positions is None:
+        positions = common.causal_positions(b, t)
+    sh = params["shared"]
+    use_remat = cfg.remat if remat is None else remat
+
+    def mamba_layer(h, lp):
+        m, _ = mamba2.apply(lp, cfg, h)
+        return shard(h + m, BATCH, None, None)
+
+    mamba_blk = common.maybe_remat(mamba_layer, use_remat, cfg.remat_policy)
+
+    def group(h, gp):
+        # k mamba layers, then one application of the shared attention block
+        h, _ = jax.lax.scan(lambda c, lp: (mamba_blk(c, lp), None), h, gp)
+        h = shared_block_train(sh, cfg, h, emb0, positions)
+        return shard(h, BATCH, None, None)
+
+    grp = common.maybe_remat(group, use_remat, cfg.remat_policy)
+    grouped, tail = _split_groups(cfg, params["layers"])
+    h, _ = jax.lax.scan(lambda c, gp: (grp(c, gp), None), h, grouped)
+    h, _ = jax.lax.scan(lambda c, lp: (mamba_blk(c, lp), None), h, tail)
+    return _logits(params, cfg, h)
+
+
+def features(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None, *, remat=None, **_):
+    """Trunk -> (post-norm h, lm_head weight) for the fused CE path."""
+    h = _embed(params, cfg, tokens) if embeds is None else embeds.astype(common.dt(cfg.compute_dtype))
+    emb0 = h
+    b, t, d = h.shape
+    if positions is None:
+        positions = common.causal_positions(b, t)
+    sh = params["shared"]
+    use_remat = cfg.remat if remat is None else remat
+
+    def mamba_layer(h, lp):
+        m, _ = mamba2.apply(lp, cfg, h)
+        return shard(h + m, BATCH, None, None)
+
+    mamba_blk = common.maybe_remat(mamba_layer, use_remat, cfg.remat_policy)
+
+    def group(h, gp):
+        h, _ = jax.lax.scan(lambda c, lp: (mamba_blk(c, lp), None), h, gp)
+        h = shared_block_train(sh, cfg, h, emb0, positions)
+        return shard(h, BATCH, None, None)
+
+    grp = common.maybe_remat(group, use_remat, cfg.remat_policy)
+    grouped, tail = _split_groups(cfg, params["layers"])
+    h, _ = jax.lax.scan(lambda c, gp: (grp(c, gp), None), h, grouped)
+    h, _ = jax.lax.scan(lambda c, lp: (mamba_blk(c, lp), None), h, tail)
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, shard(params["lm_head"], None, MODEL)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    napp = n_attn_apps(cfg)
+    hd = cfg.head_dim
+    ms = mamba2.init_state(cfg, batch)
+    return {
+        "k": jnp.zeros((napp, batch, cfg.n_kv_heads, max_len, hd), dtype),
+        "v": jnp.zeros((napp, batch, cfg.n_kv_heads, max_len, hd), dtype),
+        "conv": jnp.zeros((cfg.n_layers,) + ms["conv"].shape, jnp.float32),
+        "ssm": jnp.zeros((cfg.n_layers,) + ms["ssm"].shape, jnp.float32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, model_axis: int = 16) -> dict:
+    kv = (None, BATCH, MODEL, None, None) if cfg.n_kv_heads % model_axis == 0 else (None, BATCH, None, MODEL, None)
+    return {
+        "k": kv,
+        "v": kv,
+        "conv": (None, BATCH, None, None),
+        "ssm": (None, BATCH, MODEL, None, None),
+        "lengths": (BATCH,),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, *, max_len: int, **_):
+    h = _embed(params, cfg, tokens) if embeds is None else embeds.astype(common.dt(cfg.compute_dtype))
+    emb0 = h
+    b, t, d = h.shape
+    positions = common.causal_positions(b, t)
+    sh = params["shared"]
+
+    def mamba_layer(h, lp):
+        m, st = mamba2.apply(lp, cfg, h)
+        return shard(h + m, BATCH, None, None), st
+
+    def group(h, gp):
+        h, st = jax.lax.scan(mamba_layer, h, gp)
+        h, (k, v) = shared_block_prefill(sh, cfg, h, emb0, positions, max_len)
+        return shard(h, BATCH, None, None), (st, k, v)
+
+    grouped, tail = _split_groups(cfg, params["layers"])
+    h, (g_st, ks, vs) = jax.lax.scan(group, h, grouped)
+    h, t_st = jax.lax.scan(mamba_layer, h, tail)
+    # restack per-layer states: (G,k,...) + (R,...) -> (L,...)
+    merge = lambda a, b_: jnp.concatenate([a.reshape((-1,) + a.shape[2:]), b_], axis=0)
+    convs = merge(g_st["conv"], t_st["conv"])
+    ssms = merge(g_st["ssm"], t_st["ssm"])
+    cache = {
+        "k": ks,
+        "v": vs,
+        "conv": convs,
+        "ssm": ssms,
+        "lengths": jnp.full((b,), t, jnp.int32),
+    }
+    return _logits(params, cfg, h), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens: Array):
+    h = _embed(params, cfg, tokens)  # (B,1,D)
+    emb0 = h
+    lengths = cache["lengths"]
+    sh = params["shared"]
+    k = cfg.shared_attn_every
+    g = cfg.n_layers // k
+
+    def mamba_layer(h, xs):
+        lp, conv, ssm = xs
+        m, st = mamba2.apply(lp, cfg, h, {"conv": conv, "ssm": ssm})
+        return h + m, st
+
+    grouped, tail = _split_groups(cfg, params["layers"])
+    regroup = lambda x: x[: g * k].reshape((g, k) + x.shape[1:])
+    conv_g, conv_t = regroup(cache["conv"]), cache["conv"][g * k :]
+    ssm_g, ssm_t = regroup(cache["ssm"]), cache["ssm"][g * k :]
+
+    def group(h, xs):
+        gp, conv, ssm, kc, vc = xs
+        h, st = jax.lax.scan(mamba_layer, h, (gp, conv, ssm))
+        h, kc, vc = shared_block_decode(sh, cfg, h, emb0, kc, vc, lengths)
+        return h, (st, kc, vc)
+
+    h, (g_st, ks, vs) = jax.lax.scan(group, h, (grouped, conv_g, ssm_g, cache["k"], cache["v"]))
+    h, t_st = jax.lax.scan(mamba_layer, h, (tail, conv_t, ssm_t))
+    merge = lambda a, b_: jnp.concatenate([a.reshape((-1,) + a.shape[2:]), b_], axis=0)
+    new_cache = {
+        "k": ks,
+        "v": vs,
+        "conv": merge(g_st["conv"], t_st["conv"]),
+        "ssm": merge(g_st["ssm"], t_st["ssm"]),
+        "lengths": lengths + 1,
+    }
+    return _logits(params, cfg, h), new_cache

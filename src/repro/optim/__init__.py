@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compression import compress_int8, decompress_int8  # noqa: F401

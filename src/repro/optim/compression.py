@@ -1,0 +1,72 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 1000+ nodes the pod-level gradient all-reduce crosses DCI (slow links);
+compressing the pod-crossing reduction 4x (f32->i8 with per-block scales) cuts
+that term. Error feedback keeps the quantization bias out of the trajectory:
+the residual (g - dequant(quant(g))) is carried to the next step.
+
+The quantizer is deterministic and shape-preserving; block size 256 along the
+flattened axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+def compress_int8(x: jax.Array):
+    """x: any shape f32/bf16 -> (codes int8 (n/B, B), scales f32 (n/B,), shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    padded = jnp.pad(flat, (0, _pad_len(n) - n)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(padded), axis=1) / 127.0  # (nb,)
+    safe = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(padded / safe[:, None]), -127, 127).astype(jnp.int8)
+    return codes, scale, x.shape
+
+
+def decompress_int8(codes: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (codes.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_tree(grads, residuals):
+    """Error-feedback compress a grad tree. Returns (payload, new_residuals).
+
+    payload leaves are (codes, scale, shape) triples; new_residuals carry the
+    quantization error to the next step.
+    """
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        codes, scale, shape = compress_int8(g)
+        deq = decompress_int8(codes, scale, shape)
+        return (codes, scale, shape), g - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    payload = tdef.unflatten([p[0] for p in pairs])
+    new_res = tdef.unflatten([p[1] for p in pairs])
+    return payload, new_res
+
+
+def ef_decompress_tree(payload):
+    return jax.tree.map(
+        lambda t: decompress_int8(*t),
+        payload,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3 and hasattr(t[0], "dtype"),
+    )
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,2 @@
+from repro.runtime.trainer import Trainer, StragglerMonitor, TrainerConfig  # noqa: F401
+from repro.runtime.serving import ServingEngine, EngineConfig  # noqa: F401

@@ -1,0 +1,49 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints are written as full (unsharded) host arrays per leaf, so a
+restore is just device_put with the NEW mesh's shardings — shrink from 512
+chips to 256, grow back, or change the pool-axis factorization, and the
+training state lands correctly re-sharded. The data pipeline re-slices the
+same global cursor (ShardedLoader.restore), so the token trajectory is
+unchanged across topology changes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import CheckpointManager
+from repro.launch import mesh as meshlib
+
+
+def shardings_for(mesh: Mesh, specs: Any):
+    """Pytree of PartitionSpec-tuples -> NamedShardings on ``mesh`` (axes not
+    present in the mesh are dropped; non-divisible dims fall back to
+    replicated on that axis via the spec filter)."""
+    return jax.tree.map(
+        lambda s: meshlib.named(mesh, *s),
+        specs,
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            x is None or isinstance(x, (str, tuple)) for x in s
+        ),
+    )
+
+
+def elastic_restore(
+    manager: CheckpointManager,
+    template: Any,
+    mesh: Optional[Mesh],
+    specs: Optional[Any] = None,
+    step: Optional[int] = None,
+):
+    """Restore ``template``-shaped state onto ``mesh`` (None = local devices).
+
+    Returns (state, extras). This is the node-failure / resize recovery path:
+    build a fresh mesh from the surviving hosts, call this, continue.
+    """
+    sh = None
+    if mesh is not None and specs is not None:
+        sh = shardings_for(mesh, specs)
+    return manager.restore(template, step=step, shardings=sh)

@@ -1,0 +1,230 @@
+"""Serving engine: continuous batching over paged, tiered, prefix-shared KV.
+
+This is where the paper's three findings operate together at runtime:
+
+  * shared KV page table (core/pagetable): requests with common prompt
+    prefixes map the same physical pages (multi-ASID I-TLB analogue) —
+    dedups HBM capacity and prefill traffic;
+  * tiered placement (core/placement): hot pages stay in the HBM near tier,
+    cold pages demote to the host far tier, driven by windowed access counts
+    from the profiler (MemProf.MemBW in the loop);
+  * software prefetch (core/prefetch): the decode step's sequential page walk
+    is predicted and far pages are fetched ahead, overlapping transfer with
+    compute; accuracy/coverage accounted with the paper's formulas.
+
+Model math runs through the model's own decode_step (exact for every
+family); the page table is the management/accounting plane, as in any
+engine where the block manager is host-side (vLLM-style). The Pallas
+paged_attention kernel is the device-side fast path for dense archs
+(examples/serve_tiered.py wires it directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.workloads import WorkloadProfile
+from repro.core.memtrace import MemTracer
+from repro.core.pagetable import FAR, NEAR, SharedKVPageTable
+from repro.core.placement import TieredPlacement
+from repro.core.prefetch import PrefetchEngine
+from repro.core.profiler import AccessProfiler
+from repro.data.requests import Request, RequestGenerator
+from repro.models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    page_size: int = 16
+    n_pages: int = 1024
+    near_frac: float = 0.30
+    predictor: str = "nextline"
+    prefetch_buffer: int = 64
+    placement_window: int = 16  # engine steps per TPP epoch
+    trace_window: int = 8
+    trace_period: int = 64
+
+
+@dataclasses.dataclass
+class _Slot:
+    seq_id: int = -1
+    remaining: int = 0
+    request: Optional[Request] = None
+
+    @property
+    def active(self) -> bool:
+        return self.seq_id >= 0
+
+
+class ServingEngine:
+    def __init__(self, api: ModelAPI, params, ecfg: EngineConfig, seed: int = 0):
+        self.api = api
+        self.cfg = api.cfg
+        self.ecfg = ecfg
+        self.params = params
+        e = ecfg
+        self.pagetable = SharedKVPageTable(e.n_pages, e.page_size)
+        self.placement = TieredPlacement(
+            e.n_pages,
+            near_capacity=max(1, int(e.near_frac * e.n_pages)),
+            block_bytes=self._page_bytes(),
+        )
+        # pages start in the far tier until placement promotes them
+        self.placement.tier[:] = 1
+        self.placement.tier[: self.placement.near_capacity] = 0
+        self.prefetch = PrefetchEngine(e.predictor, e.prefetch_buffer)
+        self.profiler = AccessProfiler(e.n_pages, self._page_bytes(), window_len=e.placement_window)
+        self.tracer = MemTracer(e.trace_window, e.trace_period)
+        self.slots = [_Slot() for _ in range(e.max_batch)]
+        self.cache = api.init_cache(e.max_batch, e.max_len)
+        self.queue: List[Request] = []
+        self.finished: List[int] = []
+        self.tokens_decoded = 0
+        self.prefill_tokens = 0
+        self.prefill_tokens_saved = 0  # shared-prefix pages not recomputed/stored
+        self.engine_steps = 0
+        self.next_tokens = np.zeros((e.max_batch,), np.int32)
+        self._decode = jax.jit(api.decode)
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------------
+    def _page_bytes(self) -> int:
+        """Bytes of one logical KV page across all layers (k+v, bf16)."""
+        c = self.cfg
+        n_layers = getattr(c, "n_layers", 1)
+        return self.ecfg.page_size * 2 * c.n_kv_heads * c.head_dim * 2 * n_layers
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot_idx, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            budget = max(1, self.ecfg.max_len - 2)
+            tokens = req.tokens[:budget]
+            decode_len = max(1, min(req.decode_len, self.ecfg.max_len - len(tokens) - 1))
+            share = self.pagetable.add_sequence(req.rid, tokens)
+            self.prefill_tokens += len(tokens)
+            self.prefill_tokens_saved += share["shared"] * self.ecfg.page_size
+            # run the model prefill for this request into its slot
+            batch = self._prefill_batch(tokens)
+            logits1, cache1 = self.api.prefill(self.params, batch, max_len=self.ecfg.max_len)
+            self._write_slot(slot_idx, cache1, len(tokens))
+            nxt = int(jnp.argmax(logits1[0, -1, : self.cfg.vocab_size]))
+            self.next_tokens[slot_idx] = nxt
+            slot.seq_id = req.rid
+            slot.remaining = decode_len
+            slot.request = req
+
+    def _prefill_batch(self, tokens: np.ndarray) -> dict:
+        t = jnp.asarray(tokens, jnp.int32)[None, :]
+        fam = self.api.family
+        if fam == "vlm":
+            emb = jnp.take(self.params["embed"], t, axis=0)
+            pos = jnp.broadcast_to(jnp.arange(t.shape[1], dtype=jnp.int32), (3, 1, t.shape[1]))
+            return {"embeds": emb, "mrope_positions": pos}
+        if fam == "audio":
+            frames = jnp.zeros((1, self.cfg.n_audio_frames, self.cfg.d_model), jnp.bfloat16)
+            return {"tokens": t, "frames": frames}
+        return {"tokens": t}
+
+    def _write_slot(self, slot_idx: int, cache1: dict, length: int):
+        """Copy a batch-1 prefill cache into slot ``slot_idx`` of the batched
+        cache. Works on the cache pytree: batch axis differs per leaf family
+        (kv: axis 1; lengths: axis 0)."""
+
+        def put(dst, src):
+            if dst.ndim == 1:  # lengths
+                return dst.at[slot_idx].set(src[0])
+            return dst.at[:, slot_idx].set(src[:, 0])
+
+        self.cache = jax.tree.map(put, self.cache, cache1)
+
+    # ------------------------------------------------------------------
+    def _account_decode(self):
+        """Per decode step: every active sequence touches all its KV pages
+        (attention reads the whole cache) — that stream drives placement,
+        prefetch, the profiler and the tracer."""
+        for slot in self.slots:
+            if not slot.active:
+                continue
+            pages = np.array(self.pagetable.seqs[slot.seq_id], np.int64)
+            if pages.size == 0:
+                continue
+            self.placement.access(pages)
+            far = self.placement.tier[pages] == 1
+            self.prefetch.access_many(pages, far)
+            self.profiler.record("kv", pages)
+            self.tracer.record(pages, is_write=False)
+
+    def step(self) -> int:
+        """One engine iteration: admit -> decode -> account -> retire.
+
+        Returns number of tokens decoded this step.
+        """
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.next_tokens[:, None], jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        self.next_tokens = np.array(
+            jnp.argmax(logits[:, -1, : self.cfg.vocab_size], axis=-1), np.int32, copy=True
+        )
+        self._account_decode()
+        decoded = 0
+        for slot in self.slots:
+            if not slot.active:
+                continue
+            self.pagetable.append_token(slot.seq_id)
+            slot.remaining -= 1
+            decoded += 1
+            if slot.remaining <= 0:
+                self.pagetable.free_sequence(slot.seq_id)
+                self.finished.append(slot.seq_id)
+                slot.seq_id = -1
+                slot.request = None
+        self.tokens_decoded += decoded
+        self.engine_steps += 1
+        self.profiler.tick()
+        self.tracer.tick()
+        # TPP epoch at window boundaries
+        if self.engine_steps % self.ecfg.placement_window == 0:
+            wins = self.profiler.windows("kv")
+            if wins:
+                self.placement.step(wins[-1])
+        return decoded
+
+    def run(self, gen: RequestGenerator, n_requests: int, max_steps: int = 10_000) -> dict:
+        for _ in range(n_requests):
+            self.submit(next(gen))
+        steps = 0
+        while (self.queue or any(s.active for s in self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.stats()
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        ps = self.prefetch.stats
+        return {
+            "tokens_decoded": self.tokens_decoded,
+            "requests_finished": len(self.finished),
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "near_hit_rate": self.placement.stats.hit_rate,
+            "migrations": self.placement.stats.promotions + self.placement.stats.demotions,
+            "prefetch_accuracy": ps.accuracy,
+            "prefetch_coverage": ps.coverage,
+            "prefetch_bw_overhead": ps.bw_overhead,
+            "pagetable": self.pagetable.stats(),
+        }

@@ -1,0 +1,51 @@
+"""Shared fixtures: tiny per-family configs + deterministic batches.
+
+Tests run on 1 CPU device (the dry-run owns the 512-device env var; it must
+NOT be set here — smoke tests exercise the un-meshed code path).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.api import get_model
+
+ARCHS = list_archs()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(arch: str):
+    return get_config(arch).reduced()
+
+
+def make_batch(cfg, key, batch=2, seq=16):
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32),
+            "mrope_positions": jnp.tile(
+                jnp.arange(seq)[None, None], (3, batch, 1)
+            ).astype(jnp.int32),
+            "labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+            "frames": jax.random.normal(key, (batch, cfg.n_audio_frames, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+    }
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_api():
+    cfg = tiny("qwen2.5-3b")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    return api, params

@@ -1,0 +1,194 @@
+"""Pallas kernels vs. their pure-jnp oracles (interpret mode, shape sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mamba2_scan.ops import ssd_chunked
+from repro.kernels.mamba2_scan.ref import ssd_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.rwkv6_scan.ops import wkv6_chunked
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+from repro.kernels.tiered_gather.ops import gather_rows, tiered_lookup
+from repro.kernels.tiered_gather.ref import gather_rows_ref, tiered_lookup_ref
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (15, 5)])
+@pytest.mark.parametrize("lq,lk", [(128, 128), (96, 160)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(hq, hkv, lq, lk, dtype):
+    k1, k2, k3 = keys(3)
+    d = 64
+    q = jax.random.normal(k1, (2, hq, lq, d), dtype)
+    k = jax.random.normal(k2, (2, hkv, lk, d), dtype)
+    v = jax.random.normal(k3, (2, hkv, lk, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_noncausal():
+    k1, k2, k3 = keys(3, 7)
+    q = jax.random.normal(k1, (1, 4, 64, 64))
+    k = jax.random.normal(k2, (1, 4, 64, 64))
+    v = jax.random.normal(k3, (1, 4, 64, 64))
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode over paged KV)
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 2), (4, 4)])
+@pytest.mark.parametrize("ps", [16, 32])
+def test_paged_attention_sweep(hq, hkv, ps):
+    k0, k1, k2, k3 = keys(4, 1)
+    B, d, P, pp = 4, 64, 32, 6
+    q = jax.random.normal(k0, (B, hq, d))
+    kp = jax.random.normal(k1, (hkv, P, ps, d))
+    vp = jax.random.normal(k2, (hkv, P, ps, d))
+    pt = jax.random.randint(k3, (B, pp), 0, P)
+    lengths = jnp.array([1, ps + 3, 2 * ps, pp * ps], jnp.int32)
+    out = paged_attention(q, kp, vp, pt, lengths)
+    ref = paged_attention_ref(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (96, 32)])
+def test_wkv6_kernel_sweep(T, chunk):
+    k0, k1, k2, k3, k4 = keys(5, 2)
+    B, H, K = 2, 2, 16
+    r = jax.random.normal(k0, (B, T, H, K))
+    k = jax.random.normal(k1, (B, T, H, K))
+    v = jax.random.normal(k2, (B, T, H, K))
+    lw = -jnp.exp(jax.random.normal(k3, (B, T, H, K)))
+    u = jax.random.normal(k4, (H, K))
+    y1, s1 = wkv6_chunked(r, k, v, lw, u, chunk=chunk)
+    y2, s2 = wkv6_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_kernel_state_carry():
+    """Two chunked calls with carried state == one long call."""
+    k0, k1, k2, k3, k4 = keys(5, 3)
+    B, T, H, K = 1, 64, 2, 16
+    r = jax.random.normal(k0, (B, T, H, K))
+    k = jax.random.normal(k1, (B, T, H, K))
+    v = jax.random.normal(k2, (B, T, H, K))
+    lw = -jnp.exp(jax.random.normal(k3, (B, T, H, K)))
+    u = jax.random.normal(k4, (H, K))
+    y_full, s_full = wkv6_ref(r, k, v, lw, u)
+    h = T // 2
+    y1, s1 = wkv6_chunked(r[:, :h], k[:, :h], v[:, :h], lw[:, :h], u, chunk=16)
+    y2, s2 = wkv6_chunked(r[:, h:], k[:, h:], v[:, h:], lw[:, h:], u, state=s1, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD) scan
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (128, 64)])
+def test_ssd_kernel_sweep(T, chunk):
+    k0, k1, k2, k3, k4 = keys(5, 4)
+    B, H, P, N = 2, 2, 16, 8
+    x = jax.random.normal(k0, (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k1, (B, T, H)))
+    A = -jnp.exp(jax.random.normal(k2, (H,)))
+    Bm = jax.random.normal(k3, (B, T, N))
+    C = jax.random.normal(k4, (B, T, N))
+    D = jnp.ones((H,))
+    y1, s1 = ssd_chunked(x, dt, A, Bm, C, D, chunk=chunk)
+    y2, s2 = ssd_ref(x, dt, A, Bm, C, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tiered gather
+
+
+@pytest.mark.parametrize("D", [128, 256])
+def test_gather_rows_sweep(D):
+    k0, k1 = keys(2, 5)
+    src = jax.random.normal(k0, (128, D))
+    ids = jax.random.randint(k1, (48,), 0, 128)
+    np.testing.assert_allclose(
+        np.asarray(gather_rows(src, ids)), np.asarray(gather_rows_ref(src, ids)), rtol=1e-6
+    )
+
+
+def test_tiered_lookup_matches_ref():
+    k0, k1, k2, k3 = keys(4, 6)
+    Mh, Mc, D, N = 16, 32, 128, 24
+    hot = jax.random.normal(k0, (Mh, D))
+    cold_q = jax.random.randint(k1, (Mc, D), -127, 127).astype(jnp.int8)
+    scales = jnp.abs(jax.random.normal(k2, (Mc,))) + 0.01
+    tier = jnp.concatenate([jnp.zeros(Mh, jnp.int32), jnp.ones(Mc, jnp.int32)])
+    slot = jnp.concatenate([jnp.arange(Mh, dtype=jnp.int32), jnp.arange(Mc, dtype=jnp.int32)])
+    ids = jax.random.randint(k3, (N,), 0, Mh + Mc)
+    out = tiered_lookup(hot, cold_q, scales, tier, slot, ids)
+    ref = tiered_lookup_ref(hot, cold_q, scales, tier, slot, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model-level chunked scans vs oracles (the in-model memory-lean paths)
+
+
+def test_model_wkv6_chunked_equals_seq():
+    from repro.models.rwkv6 import _wkv6_seq, wkv6
+
+    k0, k1, k2, k3, k4 = keys(5, 8)
+    B, T, H, K = 2, 64, 2, 16
+    r = jax.random.normal(k0, (B, T, H, K))
+    k = jax.random.normal(k1, (B, T, H, K))
+    v = jax.random.normal(k2, (B, T, H, K))
+    w = jax.nn.sigmoid(jax.random.normal(k3, (B, T, H, K)))
+    u = jax.random.normal(k4, (H, K))
+    y_c, s_c = wkv6(r, k, v, w, u, chunk=16)
+    s0 = jnp.zeros((B, H, K, K), jnp.float32)
+    s_s, y_s = _wkv6_seq(s0, r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_s), rtol=1e-5, atol=1e-5)
+
+
+def test_model_ssd_chunked_equals_seq():
+    from repro.models.mamba2 import _ssd_seq, ssd_scan
+
+    k0, k1, k2, k3, k4 = keys(5, 9)
+    B, T, H, P, N = 2, 64, 2, 8, 4
+    x = jax.random.normal(k0, (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k1, (B, T, H)))
+    A = -jnp.exp(jax.random.normal(k2, (H,)))
+    Bm = jax.random.normal(k3, (B, T, N))
+    C = jax.random.normal(k4, (B, T, N))
+    D = jnp.ones((H,))
+    y_c, s_c = ssd_scan(x, dt, A, Bm, C, D, chunk=16)
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    s_s, y_s = _ssd_seq(s0, x, dt, A, Bm, C)
+    y_s = y_s + x * D[None, None, :, None]
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_s), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,172 @@
+"""Per-architecture smoke tests: loss/grad finiteness, output shapes,
+prefill+decode vs full-forward consistency, fused-CE equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs, skipped_shapes
+from repro.models import common
+from repro.models.api import get_model, make_serve_step
+
+from conftest import make_batch, tiny
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_loss_and_grads_finite(arch, rng):
+    cfg = tiny(arch)
+    api = get_model(cfg)
+    params = api.init(rng)
+    batch = make_batch(cfg, rng)
+    loss, metrics = api.loss(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(metrics["tokens"]) == batch["labels"].size
+    grads = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    gsq = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gsq) and gsq > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_shapes(arch, rng):
+    cfg = tiny(arch)
+    api = get_model(cfg)
+    params = api.init(rng)
+    B, S = 2, 16
+    batch = {k: v for k, v in make_batch(cfg, rng, B, S).items() if k != "labels"}
+    logits, cache = api.prefill(params, batch, max_len=S + 4)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    nxt, cache2 = api.decode(params, cache, jnp.ones((B, 1), jnp.int32))
+    assert nxt.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(nxt.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "internlm2-1.8b", "smollm-360m", "rwkv6-7b"])
+def test_decode_matches_forward(arch, rng):
+    """prefill(t[:S]) + decode(t[S]) must equal forward(t[:S+1]) at the last
+    position — the KV-cache/recurrent-state path is exact, not approximate."""
+    cfg = tiny(arch)
+    api = get_model(cfg)
+    params = api.init(rng)
+    B, S = 2, 12
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    from repro.models import rwkv6, transformer
+
+    mod = transformer if cfg.family == "dense" else rwkv6
+    full = mod.forward(params, cfg, toks)  # (B, S+1, Vp)
+    _, cache = api.prefill(params, {"tokens": toks[:, :S]}, max_len=S + 4)
+    step_logits, _ = api.decode(params, cache, toks[:, S:])
+    a = np.asarray(full[:, S, :], np.float32)
+    b = np.asarray(step_logits[:, 0, :], np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+
+
+def test_fused_ce_matches_plain(rng):
+    B, S, D, V = 2, 16, 8, 50
+    Vp = 64
+    h = jax.random.normal(rng, (B, S, D))
+    w = jax.random.normal(jax.random.PRNGKey(3), (D, Vp))
+    labels = jax.random.randint(rng, (B, S), 0, V).at[0, 0].set(-1)
+    logits = jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=jnp.float32)
+    l_ref, m_ref = common.cross_entropy(logits, labels, V)
+    l_fused, m_fused = common.fused_ce_loss(h, w, labels, V, chunk=4)
+    np.testing.assert_allclose(float(l_ref), float(l_fused), rtol=1e-5)
+    for k in ("loss", "zloss", "tokens", "accuracy"):
+        np.testing.assert_allclose(float(m_ref[k]), float(m_fused[k]), rtol=1e-5, err_msg=k)
+
+
+def test_fused_ce_grads_match(rng):
+    B, S, D, V = 2, 8, 8, 30
+    h = jax.random.normal(rng, (B, S, D))
+    w = jax.random.normal(jax.random.PRNGKey(3), (D, 32))
+    labels = jax.random.randint(rng, (B, S), 0, V)
+
+    def f_plain(h, w):
+        logits = jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=jnp.float32)
+        return common.cross_entropy(logits, labels, V)[0]
+
+    def f_fused(h, w):
+        return common.fused_ce_loss(h, w, labels, V, chunk=4)[0]
+
+    g1 = jax.grad(f_plain, argnums=(0, 1))(h, w)
+    g2 = jax.grad(f_fused, argnums=(0, 1))(h, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_features_matches_forward_logits(rng):
+    """forward() must equal einsum(features()) — serving and loss agree."""
+    cfg = tiny("qwen2.5-3b")
+    api = get_model(cfg)
+    params = api.init(rng)
+    toks = jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)
+    from repro.models import transformer
+
+    logits = transformer.forward(params, cfg, toks)
+    h, w = transformer.features(params, cfg, toks)
+    logits2 = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype), preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(logits2, np.float32), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_serve_step_greedy(tiny_dense_api, rng):
+    api, params = tiny_dense_api
+    B, S = 2, 8
+    toks = jax.random.randint(rng, (B, S), 0, api.cfg.vocab_size)
+    _, cache = api.prefill(params, {"tokens": toks}, max_len=S + 4)
+    step = make_serve_step(api)
+    nxt, cache2 = step(params, cache, toks[:, -1:])
+    assert nxt.shape == (B, 1) and nxt.dtype == jnp.int32
+    assert int(cache2["lengths"][0]) == S + 1
+
+
+def test_shape_assignment_covers_40_cells():
+    cells = [(a, s) for a in list_archs() for s in applicable_shapes(get_config(a))]
+    # 10 archs x (train, prefill, decode) + long_500k for the 2 sub-quadratic
+    assert len(cells) == 32
+    skips = {a: skipped_shapes(get_config(a)) for a in list_archs()}
+    n_skipped = sum(len(v) for v in skips.values())
+    assert len(cells) + n_skipped == 40
+    for a in ("rwkv6-7b", "zamba2-1.2b"):
+        assert "long_500k" in applicable_shapes(get_config(a))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_input_specs_match_shapes(arch):
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    for shape in applicable_shapes(cfg):
+        sh = SHAPES[shape]
+        specs = api.input_specs(shape)
+        bspecs = api.batch_specs(shape)
+        assert set(specs) == set(bspecs)
+        if sh.kind == "train":
+            assert specs["labels"].shape == (sh.global_batch, sh.seq_len)
+        if sh.kind == "decode":
+            assert specs["tokens"].shape == (sh.global_batch, 1)
+            assert "cache" in specs
+
+
+def test_grad_accum_matches_single_batch(rng):
+    """grad_accum=A must produce the same update as one big batch (same data)."""
+    import dataclasses
+
+    from repro.models.api import make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = tiny("smollm-360m")
+    api1 = get_model(dataclasses.replace(cfg, grad_accum=1))
+    api2 = get_model(dataclasses.replace(cfg, grad_accum=2))
+    params = api1.init(rng)
+    opt = adamw_init(params)
+    batch = make_batch(cfg, rng, batch=4, seq=8)
+    s1 = make_train_step(api1, AdamWConfig())
+    s2 = make_train_step(api2, AdamWConfig())
+    p1, _, m1 = jax.jit(s1)(params, opt, batch)
+    p2, _, m2 = jax.jit(s2)(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-4, atol=2e-5
+        )

@@ -1,0 +1,209 @@
+"""Trainer (fault tolerance, stragglers), checkpointing, data, serving."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.workloads import get_profile
+from repro.data.loader import ShardedLoader
+from repro.data.requests import RequestGenerator
+from repro.data.synthetic import SyntheticCorpus, token_batches
+from repro.models.api import get_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    ef_compress_tree,
+    ef_decompress_tree,
+    init_residuals,
+)
+from repro.runtime.serving import EngineConfig, ServingEngine
+from repro.runtime.trainer import SimulatedFailure, StragglerMonitor, Trainer, TrainerConfig
+
+
+def _mk_trainer(tmp, arch="smollm-360m", **tkw):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    tr = Trainer(api, AdamWConfig(lr=1e-3), TrainerConfig(ckpt_dir=str(tmp), ckpt_every=3, **tkw))
+    return cfg, api, tr
+
+
+# ---------------------------------------------------------------------------
+# trainer
+
+
+def test_loss_decreases(tmp_path):
+    cfg, api, tr = _mk_trainer(tmp_path)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seq_len=16)
+    tr.init_state()
+    log = tr.run(token_batches(corpus, 8), 20)
+    first = np.mean([m["loss"] for m in log[:4]])
+    last = np.mean([m["loss"] for m in log[-4:]])
+    assert last < first, (first, last)
+
+
+def test_crash_resume_bitwise(tmp_path):
+    """Crash at step 5, restart -> identical params at step 9 as a clean run."""
+    cfg, api, tr = _mk_trainer(tmp_path / "a")
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seq_len=16)
+    tr.init_state()
+    with pytest.raises(SimulatedFailure):
+        tr.run(token_batches(corpus, 8), 9, fail_at=5)
+    tr.ckpt.wait()
+    # restart from disk
+    cfg2, api2, tr2 = _mk_trainer(tmp_path / "a")
+    assert tr2.try_restore()
+    assert tr2.step == 3  # last checkpoint (ckpt_every=3)
+    tr2.run(token_batches(corpus, 8, start_step=tr2.step), 9 - tr2.step)
+    # clean run, no crash
+    cfg3, api3, tr3 = _mk_trainer(tmp_path / "b")
+    tr3.init_state()
+    tr3.run(token_batches(corpus, 8), 9)
+    for a, b in zip(jax.tree.leaves(tr2.params), jax.tree.leaves(tr3.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(z=3.0, min_steps=4)
+    for i in range(20):
+        mon.observe(i, 0.1 + 0.001 * (i % 3))
+    assert not mon.flagged
+    assert mon.observe(20, 2.0)  # 20x step time -> straggler
+    assert mon.flagged and mon.flagged[-1][0] == 20
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.arange(12.0).reshape(3, 4), "n": jnp.int32(7)}
+    for step in (1, 2, 3):
+        mgr.save(step, state)
+    assert mgr.latest_step() == 3
+    restored, extras = mgr.restore(state)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+    steps = sorted(int(d.split("_")[-1]) for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == [2, 3]  # keep=2 garbage-collected step 1
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.ones((128, 128))}
+    mgr.save_async(10, state)
+    mgr.wait()
+    assert mgr.latest_step() == 10
+
+
+# ---------------------------------------------------------------------------
+# optimizer + gradient compression
+
+
+def test_adamw_reference_step():
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.array([1.0, -2.0])}
+    grads = {"w": jnp.array([0.5, 0.5])}
+    state = adamw_init(params)
+    new_p, state, _ = adamw_update(cfg, params, grads, state)
+    m = 0.1 * 0.5
+    v = 0.001 * 0.25
+    mhat, vhat = m / 0.1, v / 0.001
+    want = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(float(new_p["w"][0]), want, rtol=1e-5)
+
+
+def test_int8_compression_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3.0
+    codes, scale, shape = compress_int8(x)
+    assert codes.dtype == jnp.int8
+    y = decompress_int8(codes, scale, shape)
+    err = float(jnp.abs(x - y).max()) / float(jnp.abs(x).max())
+    assert err < 0.02  # ~1/127
+
+
+def test_error_feedback_accumulates():
+    """EF: compressing the same grad repeatedly converges (residual shrinks)."""
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (64,))}
+    residuals = init_residuals(grads)
+    total = jnp.zeros((64,))
+    for _ in range(8):
+        payload, residuals = ef_compress_tree(grads, residuals)
+        total = total + ef_decompress_tree(payload)["w"]
+    np.testing.assert_allclose(np.asarray(total / 8), np.asarray(grads["w"]), atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# data
+
+
+def test_loader_determinism_and_restore():
+    corpus = SyntheticCorpus(vocab_size=128, seq_len=8)
+    l1 = ShardedLoader(corpus, global_batch=4, host_id=0, n_hosts=1)
+    batches = [next(l1) for _ in range(6)]
+    state = l1.state()
+    nxt = next(l1)
+    l1.close()
+    l2 = ShardedLoader.restore(corpus, 4, state, host_id=0, n_hosts=1)
+    nxt2 = next(l2)
+    l2.close()
+    np.testing.assert_array_equal(nxt[1]["tokens"], nxt2[1]["tokens"])
+
+
+def test_loader_host_sharding_disjoint():
+    corpus = SyntheticCorpus(vocab_size=128, seq_len=8)
+    l0 = ShardedLoader(corpus, global_batch=8, host_id=0, n_hosts=2)
+    l1 = ShardedLoader(corpus, global_batch=8, host_id=1, n_hosts=2)
+    _, b0 = next(l0)
+    _, b1 = next(l1)
+    l0.close()
+    l1.close()
+    assert b0["tokens"].shape == (4, 8)  # half the global batch each
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# serving engine (tiering + prefix sharing + prefetch live)
+
+
+def _engine(arch="smollm-360m", **ekw):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(max_batch=4, max_len=64, n_pages=512, **ekw)
+    return cfg, ServingEngine(api, params, ecfg)
+
+
+def test_engine_serves_requests():
+    cfg, eng = _engine()
+    prof = dataclasses.replace(get_profile("Web1"), prompt_mean=20, decode_mean=6)
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=0)
+    stats = eng.run(gen, n_requests=8, max_steps=400)
+    assert stats["requests_finished"] == 8
+    assert stats["tokens_decoded"] > 0
+    assert 0.0 <= stats["prefetch_accuracy"] <= 1.0
+
+
+def test_engine_prefix_sharing_saves_prefill():
+    """High prefix-share profile must dedupe prefill pages (paper §4 sharing)."""
+    cfg, eng = _engine()
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=32, decode_mean=4, prefix_share=1.0, n_prefixes=1
+    )
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=1)
+    stats = eng.run(gen, n_requests=10, max_steps=500)
+    assert stats["prefill_tokens_saved"] > 0
+    assert eng.pagetable.stats()["shared_mappings"] > 0
+
+
+def test_engine_tiering_hit_rate():
+    cfg, eng = _engine(near_frac=0.5)
+    prof = dataclasses.replace(get_profile("Cache1"), prompt_mean=16, decode_mean=8)
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=2)
+    stats = eng.run(gen, n_requests=8, max_steps=400)
+    assert 0.0 <= stats["near_hit_rate"] <= 1.0

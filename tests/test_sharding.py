@@ -1,0 +1,149 @@
+"""Mesh/sharding helpers + HLO cost-model unit tests (1-device safe)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import hlo_analysis as ha
+from repro.launch import mesh as meshlib
+from repro.launch.roofline import roofline, roofline_fraction
+
+
+def test_shard_is_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    y = meshlib.shard(x, "data", "model")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_spec_filters_missing_axes():
+    mesh = meshlib.make_host_mesh(model=1)
+    with meshlib.activate(mesh):
+        s = meshlib.spec(("pod", "data"), "model", None)
+        assert s == P(("data",), "model", None)
+
+
+def test_shard_divisibility_drop():
+    mesh = meshlib.make_host_mesh(model=1)  # data axis size = n devices (1)
+    with meshlib.activate(mesh):
+        x = jnp.ones((3, 5))
+        y = meshlib.shard(x, "data", "model")  # 3 % 1 == 0 -> applies, harmless
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_production_mesh_shapes():
+    # shape math only (no devices needed for the assertion of the spec)
+    import inspect
+
+    src = inspect.getsource(meshlib.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+
+
+# ---------------------------------------------------------------------------
+# HLO cost model
+
+
+SAMPLE_HLO = """
+HloModule test
+
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.9 = f32[] add(%x, %y)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128] get-tuple-element(%p), index=1
+  %w = f32[128,128] constant({...})
+  %d = f32[8,128] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128] all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%add.clone
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%ip, %ar)
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %a)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_walk_trip_counts_collectives():
+    cost = ha.analyze(SAMPLE_HLO, total_devices=256)
+    # dot: 2*8*128*128 flops, 12 trips (+ scalar loop bookkeeping)
+    want = 2 * 8 * 128 * 128 * 12
+    assert want <= cost.flops <= want + 100
+    # all-reduce operand: 8*128*4 bytes, 12 trips
+    assert cost.collective_bytes["all-reduce"] == 8 * 128 * 4 * 12
+    assert cost.collective_ops["all-reduce"] == 12
+    assert cost.group_sizes["all-reduce"] == 16
+
+
+def test_hlo_slice_aware_bytes():
+    hlo = """
+HloModule t
+
+ENTRY %main (a: f32[32,1024], i: s32[]) -> f32[1,1024] {
+  %a = f32[32,1024] parameter(0)
+  %i = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %ds = f32[1,1024] dynamic-slice(%a, %i, %z), dynamic_slice_sizes={1,1024}
+}
+"""
+    cost = ha.analyze(hlo, total_devices=1)
+    # 2 * slice bytes, NOT the whole 32x1024 buffer
+    assert cost.bytes == 2 * 1024 * 4
+
+
+def test_roofline_terms_and_bound():
+    c = ha.Cost()
+    c.collective_bytes["all-reduce"] = 1e9
+    c.group_sizes["all-reduce"] = 16
+    t = roofline(
+        flops=1e12,
+        bytes_=1e11,
+        cost=c,
+        n_params=1e9,
+        n_tokens=1e6,
+        chips=256,
+        kind="train",
+    )
+    assert t.compute_s > 0 and t.memory_s > 0 and t.collective_s > 0
+    assert t.bound in ("compute", "memory", "collective")
+    assert 0.0 <= roofline_fraction(t) <= 1.0
+
+
+def test_fused_slice_discount():
+    hlo = """
+HloModule t
+
+%fused_dus (p0: f32[64,256], p1: f32[1,256], p2: s32[]) -> f32[64,256] {
+  %p0 = f32[64,256] parameter(0)
+  %p1 = f32[1,256] parameter(1)
+  %p2 = s32[] parameter(2)
+  %z = s32[] constant(0)
+  ROOT %dus = f32[64,256] dynamic-update-slice(%p0, %p1, %p2, %z)
+}
+
+ENTRY %main (a: f32[64,256], u: f32[1,256], i: s32[]) -> f32[64,256] {
+  %a = f32[64,256] parameter(0)
+  %u = f32[1,256] parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[64,256] fusion(%a, %u, %i), kind=kLoop, calls=%fused_dus
+}
+"""
+    cost = ha.analyze(hlo, total_devices=1)
+    # boundary would be (in 64x256 + 1x256 + out 64x256)*4B; discounted to ~2*slice
+    assert cost.bytes <= 3 * 256 * 4 + 16
