@@ -1,0 +1,77 @@
+"""Fleet scaling study: throughput vs replica count x router policy.
+
+For each (n_replicas, policy) cell the same Web1-like traffic (high shared-
+template rate — the paper's "same code everywhere" in request form) is
+served and scored with the fleet cost model. The spread between
+prefix-affinity and round-robin at a given width is the fleet-level value
+of the shared page table; the stitched-trace validation column is the
+Table 6 check run at fleet scale.
+"""
+import dataclasses
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator
+from repro.fleet import build_fleet, export_all, fleet_vocab, validate_fleet
+
+from _common import fmt_table
+
+POLICIES = ("round-robin", "least-loaded", "prefix-affinity")
+WIDTHS = (1, 2, 4)
+
+
+def run_cell(n_replicas: int, policy: str, n_requests: int = 16, seed: int = 0):
+    fleet = build_fleet(
+        n_replicas,
+        policy=policy,
+        trace_window=16,
+        trace_period=32,
+        autotier=dict(near_frac=0.30, epoch_steps=16),
+        seed=seed,
+    )
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=24, decode_mean=6, prefix_share=0.9, n_prefixes=3
+    )
+    gen = RequestGenerator(prof, vocab_size=fleet_vocab(), seed=seed)
+    stats = fleet.run(gen, n_requests=n_requests, max_steps=600, submit_per_step=2)
+    val = validate_fleet(export_all(fleet.replicas))
+    return stats, val
+
+
+def main():
+    rows = []
+    best = {}
+    for width in WIDTHS:
+        for policy in POLICIES:
+            stats, val = run_cell(width, policy)
+            rows.append(
+                (
+                    width,
+                    policy,
+                    f"{stats['simulated_throughput']:.3f}",
+                    stats["prefill_tokens_saved"],
+                    stats["shared_mappings"],
+                    f"{stats['near_hit_rate']:.3f}",
+                    f"{val['hit_ratio_error']*100:.2f}%",
+                    f"{abs(val['rw_ratio_error_pct']):.2f}%",
+                )
+            )
+            best[(width, policy)] = stats["simulated_throughput"]
+    print("fleet scaling: simulated throughput by replica count x router policy")
+    print(
+        fmt_table(
+            rows,
+            ("replicas", "policy", "sim-tput", "prefill-saved", "shared-maps", "near-hit", "trace-hit-err", "trace-rw-err"),
+        )
+    )
+    w = max(WIDTHS)
+    gain = best[(w, "prefix-affinity")] / max(best[(w, "round-robin")], 1e-9)
+    print(f"\nprefix-affinity vs round-robin at {w} replicas: {gain:.2f}x")
+    if gain <= 1.0:
+        print("fleet_bench: FAIL (affinity did not beat round-robin)")
+        return 1
+    print("fleet_bench ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

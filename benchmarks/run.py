@@ -21,20 +21,30 @@ MODULES = [
     "fig21_prefetch_bw",
     "fig22_prefetch_acc",
     "table6_trace",
+    "fleet_bench",
     "kernels_bench",
 ]
 
 
 def main(argv):
     sel = [m for m in MODULES if not argv or any(a in m for a in argv)]
+    if argv and not sel:
+        print(f"no benchmark matches {argv}; available: {MODULES}")
+        return 2
     failures = []
     for name in sel:
         print("\n" + "=" * 78)
         t0 = time.time()
         try:
             mod = importlib.import_module(name)
-            mod.main()
-            print(f"[{name}] ok in {time.time()-t0:.1f}s")
+            rc = mod.main()
+            # benchmarks return result dicts on success; an int is a
+            # process-style return code (fleet_bench's self-check)
+            if isinstance(rc, int) and rc != 0:
+                failures.append(name)
+                print(f"[{name}] FAILED: main() returned {rc}")
+            else:
+                print(f"[{name}] ok in {time.time()-t0:.1f}s")
         except Exception:  # noqa: BLE001
             failures.append(name)
             print(f"[{name}] FAILED:\n{traceback.format_exc(limit=6)}")

@@ -1,0 +1,122 @@
+"""Fleet subsystem: multi-replica serving with fleet-wide MemProf.
+
+The paper's observations are fleet-level — the same code runs on many
+hosts, and both its profiler and its tracer only become *representative*
+when aggregated across them. Module -> paper-section map:
+
+* ``replica.py``  — one profiled host: engine + live hardware-counter
+  analogue (§3's per-host collection; Table 6's "live" column).
+* ``router.py``   — request placement across hosts; prefix-affinity is the
+  fleet form of the multi-ASID shared-TLB idea (§4 / Fig. 17): same-template
+  requests land where those KV translations already live.
+* ``aggregator.py`` — fleet MemProf: sums per-page counts over hosts
+  (§4, Fig. 6/9/18) and stitches short attach/detach trace windows from
+  multiple hosts into one representative trace, validated by cache-sim
+  replay against live counters (§6.2-§6.3, Table 6).
+* ``autotier.py`` — online re-tiering from the aggregated histogram
+  (§5, Table 4/5): plan on fleet behavior, push placement to every host.
+* ``admission.py`` — overload sheds at the door instead of pushing the
+  far tier past its latency knee (§2, Fig. 4).
+
+``build_fleet`` wires it together; examples/serve_fleet.py is the demo and
+benchmarks/fleet_bench.py the scaling study.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.fleet.admission import AdmissionController, SLOModel
+from repro.fleet.aggregator import (
+    aggregate_counts,
+    export_all,
+    fleet_report,
+    live_fleet_counters,
+    stitch_fleet,
+    validate_fleet,
+)
+from repro.fleet.autotier import AutoTierer, TierEpoch
+from repro.fleet.replica import Replica, ReplicaProfile
+from repro.fleet.router import (
+    POLICIES,
+    FleetRouter,
+    LeastLoadedPolicy,
+    PrefixAffinityPolicy,
+    RoundRobinPolicy,
+    simulated_throughput,
+)
+
+__all__ = [
+    "AdmissionController",
+    "SLOModel",
+    "AutoTierer",
+    "TierEpoch",
+    "Replica",
+    "ReplicaProfile",
+    "FleetRouter",
+    "RoundRobinPolicy",
+    "LeastLoadedPolicy",
+    "PrefixAffinityPolicy",
+    "POLICIES",
+    "simulated_throughput",
+    "aggregate_counts",
+    "export_all",
+    "fleet_report",
+    "live_fleet_counters",
+    "stitch_fleet",
+    "validate_fleet",
+    "build_fleet",
+]
+
+_MODEL_CACHE: dict = {}
+
+
+def build_fleet(
+    n_replicas: int,
+    policy: str = "prefix-affinity",
+    arch: str = "smollm-360m",
+    admission: Optional[AdmissionController] = None,
+    autotier: Optional[dict] = None,
+    live_cache_blocks: int = 128,
+    seed: int = 0,
+    **engine_kwargs,
+) -> FleetRouter:
+    """Construct N replicas sharing one model (params + jitted decode),
+    a router with the named policy, and optionally admission/autotiering.
+
+    ``autotier`` kwargs (near_frac, epoch_steps) attach an AutoTierer as an
+    on_step hook and return it as ``router.autotierer``.
+    """
+    from repro.configs import get_config
+    from repro.models.api import get_model
+    from repro.runtime.serving import EngineConfig, ServingEngine
+
+    if arch not in _MODEL_CACHE:
+        cfg = get_config(arch).reduced()
+        api = get_model(cfg)
+        _MODEL_CACHE[arch] = (cfg, api, api.init(jax.random.PRNGKey(0)))
+    cfg, api, params = _MODEL_CACHE[arch]
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; choose from {sorted(POLICIES)}")
+    kw = dict(max_batch=4, max_len=64, n_pages=512)
+    kw.update(engine_kwargs)
+    replicas = [
+        Replica(i, ServingEngine(api, params, EngineConfig(**kw), seed=seed + i), live_cache_blocks)
+        for i in range(n_replicas)
+    ]
+    router = FleetRouter(replicas, POLICIES[policy](), admission=admission)
+    router.autotierer = None
+    if autotier is not None:
+        router.autotierer = AutoTierer(replicas, **autotier)
+        router.on_step.append(router.autotierer)
+    return router
+
+
+def fleet_vocab(arch: str = "smollm-360m") -> int:
+    """Vocab size of the (cached) reduced model — for RequestGenerators."""
+    from repro.configs import get_config
+
+    if arch in _MODEL_CACHE:
+        return _MODEL_CACHE[arch][0].vocab_size
+    return get_config(arch).reduced().vocab_size

@@ -1,0 +1,65 @@
+"""Admission control: shed overload instead of thrashing the far tier.
+
+The paper's Fig. 4 point is that pushing DDR past its utilization knee
+explodes latency — the serving analogue is a backlog so deep that decode
+steps queue behind far-tier migration traffic. The controller models each
+request as (prefill + decode) token-equivalents of work, estimates the
+fleet's service rate from its slot capacity, and admits only while the
+projected queueing delay stays inside the SLO. Shed requests are counted,
+not errored: an overloaded fleet degrades by rejecting at the door.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.data.requests import Request
+
+
+@dataclasses.dataclass
+class SLOModel:
+    """Delay budget in engine steps + how request tokens map to steps.
+
+    A decode token costs one slot-step; prefill is amortized (one batched
+    pass) so it is discounted by ``prefill_weight``.
+    """
+
+    max_delay_steps: float = 64.0
+    prefill_weight: float = 0.25
+
+    def request_cost(self, req: Request) -> float:
+        return self.prefill_weight * len(req.tokens) + req.decode_len
+
+
+class AdmissionController:
+    def __init__(self, slo: SLOModel):
+        self.slo = slo
+        self.offered = 0
+        self.admitted = 0
+
+    @property
+    def shed(self) -> int:
+        return self.offered - self.admitted
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / max(self.offered, 1)
+
+    def backlog_steps(self, replicas: List) -> float:
+        """Projected steps to drain the fleet's queued work at full rate.
+
+        Queued prompts are discounted by the same ``prefill_weight`` as
+        ``request_cost`` so admission and its SLO share one cost model.
+        """
+        work = sum(r.engine.backlog_tokens(self.slo.prefill_weight) for r in replicas)
+        rate = sum(len(r.engine.slots) for r in replicas)  # tokens/step ideal
+        return work / max(rate, 1)
+
+    def admit(self, req: Request, replicas: List) -> bool:
+        self.offered += 1
+        rate = sum(len(r.engine.slots) for r in replicas)
+        projected = self.backlog_steps(replicas) + self.slo.request_cost(req) / max(rate, 1)
+        if projected > self.slo.max_delay_steps:
+            return False
+        self.admitted += 1
+        return True

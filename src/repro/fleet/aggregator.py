@@ -1,0 +1,109 @@
+"""Fleet-wide MemProf: stitch per-host windows into one representative view.
+
+Two aggregations, mirroring the paper's two planes:
+
+* **profiling** (§4, Fig. 6): per-page access counts are summed over the
+  *logical* page-id space — every replica runs the same engine over the same
+  id space, exactly the "same code on many cores/hosts" premise, so the sum
+  is the fleet's hotness histogram and drives fleet/autotier.py.
+
+* **tracing** (§6.2, Table 6): each host's short attach/detach MemTracer
+  windows are interleaved by time into ONE trace. Physical pages on
+  different hosts are different memory, so block ids are namespaced per
+  replica before stitching. Validation replays the stitched trace through a
+  CacheSim scaled to the fleet's total cache capacity and compares hit ratio
+  and R:W mix against the live per-host counters (paper: errors <= ~5%).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import distribution
+from repro.core.memtrace import TraceWindow, validate_trace
+from repro.fleet.replica import Replica, ReplicaProfile
+
+
+def export_all(replicas: List[Replica]) -> List[ReplicaProfile]:
+    return [r.export_profile() for r in replicas]
+
+
+def aggregate_counts(profiles: List[ReplicaProfile]) -> np.ndarray:
+    """Fleet hotness histogram over the shared logical page-id space."""
+    n = max(p.counts.size for p in profiles)
+    out = np.zeros(n, np.int64)
+    for p in profiles:
+        out[: p.counts.size] += p.counts
+    return out
+
+
+def stitch_fleet(profiles: List[ReplicaProfile], n_pages: Optional[int] = None) -> TraceWindow:
+    """One representative fleet trace from many hosts' windows.
+
+    Windows are ordered by (start_step, rid): hosts tick in lockstep, so
+    this is a fair round-robin interleave of contemporaneous windows —
+    each host's working set stays warm in the fleet-scaled cache just as it
+    does in that host's own cache. ``n_pages`` (the per-host namespace
+    stride) defaults to the widest host's page space.
+    """
+    if n_pages is None:
+        n_pages = max((p.n_pages for p in profiles), default=0)
+    tagged = []
+    for p in profiles:
+        for w in p.windows:
+            tagged.append((w.start_step, p.rid, w))
+    tagged.sort(key=lambda t: (t[0], t[1]))
+    if not tagged:
+        return TraceWindow(0, np.zeros(0, np.int64), np.zeros(0, bool))
+    blocks = np.concatenate([w.blocks + rid * n_pages for _, rid, w in tagged])
+    writes = np.concatenate([w.is_write for _, _, w in tagged])
+    return TraceWindow(tagged[0][0], blocks, writes)
+
+
+def live_fleet_counters(profiles: List[ReplicaProfile]) -> dict:
+    """Ground truth: access-weighted live hit ratio + aggregate R:W."""
+    acc = sum(p.live_accesses for p in profiles)
+    hit = sum(p.live_hit_ratio * p.live_accesses for p in profiles) / max(acc, 1)
+    reads = sum(p.reads for p in profiles)
+    writes = sum(p.writes for p in profiles)
+    return {"hit_ratio": hit, "rw_ratio": reads / max(writes, 1), "accesses": acc}
+
+
+def validate_fleet(
+    profiles: List[ReplicaProfile],
+    n_pages: Optional[int] = None,
+    capacity_per_replica: Optional[int] = None,
+) -> dict:
+    """Table 6 at fleet scale: stitched-trace replay vs live counters.
+
+    The namespace stride and sim capacity default to what the profiles
+    themselves report (page-space width, live-cache size), so the
+    validation can't silently drift from the fleet's actual geometry.
+    ``rw_ratio_error_pct`` is signed, as in core/memtrace.validate_trace.
+    """
+    trace = stitch_fleet(profiles, n_pages)
+    live = live_fleet_counters(profiles)
+    if capacity_per_replica is None:
+        capacity_per_replica = max((p.live_capacity for p in profiles), default=1)
+    res = validate_trace(
+        trace, live["hit_ratio"], live["rw_ratio"],
+        capacity_blocks=capacity_per_replica * len(profiles),
+    )
+    res["trace_len"] = int(trace.blocks.size)
+    return res
+
+
+def fleet_report(profiles: List[ReplicaProfile], capacity_fracs=(0.05, 0.1, 0.25)) -> dict:
+    """The MemProf report over the aggregated fleet histogram (Fig. 9/18)."""
+    counts = aggregate_counts(profiles)
+    return {
+        "total_accesses": int(counts.sum()),
+        "active_frac": float((counts > 0).mean()),
+        "hot": {f: distribution.hot_fraction(counts, f) for f in capacity_fracs},
+        "capacity_for_90pct": distribution.capacity_for_traffic(counts, 0.9),
+        "zipf_alpha": distribution.zipf_alpha(counts),
+        "near_hit_rate": float(
+            np.mean([p.near_hit_rate for p in profiles]) if profiles else 0.0
+        ),
+    }

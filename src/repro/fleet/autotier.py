@@ -1,0 +1,84 @@
+"""Online fleet re-tiering: plan on the aggregate, push to every host.
+
+The paper's tiering decision (§5, Table 5) is made from *fleet* behavior —
+"few pages serve most bandwidth" is a property of the service, not of one
+host's recent window. The AutoTierer periodically re-runs core/tiering.plan
+on the aggregated fleet histogram and pushes the resulting near-tier page
+set to every replica (which suppresses their local TPP loops), so placement
+is driven by the representative profile instead of each engine's noisy
+local view. Under a stationary workload the pushed plan converges: the
+Jaccard overlap of successive near-sets approaches 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import tiering
+from repro.core.hw import HBM_BW, HOST_LINK_BW, TierSpec
+from repro.fleet import aggregator
+from repro.fleet.replica import Replica
+
+
+def _fleet_specs(near_frac: float) -> tuple:
+    return (
+        TierSpec("hbm", near_frac, HBM_BW, 1.0, 8.0),
+        TierSpec("host-dram", 1.0 - near_frac, HOST_LINK_BW, 6.0, 1.0),
+    )
+
+
+@dataclasses.dataclass
+class TierEpoch:
+    fleet_step: int
+    near_ids: np.ndarray
+    near_hit_frac: float  # planned fraction of accesses served near
+    migrated_pages: int  # placement changes this push cost, fleet-wide
+    overlap_prev: float  # Jaccard vs previous epoch's near set
+
+
+class AutoTierer:
+    def __init__(
+        self,
+        replicas: List[Replica],
+        near_frac: float = 0.30,
+        epoch_steps: int = 32,
+        specs: Optional[tuple] = None,
+    ):
+        self.replicas = replicas
+        self.near_frac = near_frac
+        self.epoch_steps = epoch_steps
+        self.specs = specs or _fleet_specs(near_frac)
+        self.history: List[TierEpoch] = []
+
+    # ------------------------------------------------------------------
+    def __call__(self, fleet_step: int):
+        """FleetRouter.on_step hook."""
+        if fleet_step % self.epoch_steps == 0:
+            self.step(fleet_step)
+
+    def step(self, fleet_step: int = 0) -> Optional[TierEpoch]:
+        profiles = aggregator.export_all(self.replicas)
+        counts = aggregator.aggregate_counts(profiles)
+        if counts.sum() == 0:
+            return None
+        p = tiering.plan(counts, self.specs)
+        migrated = sum(r.apply_placement(p.hot_blocks) for r in self.replicas)
+        overlap = 0.0
+        if self.history:
+            prev = set(self.history[-1].near_ids.tolist())
+            cur = set(p.hot_blocks.tolist())
+            overlap = len(prev & cur) / max(len(prev | cur), 1)
+        epoch = TierEpoch(fleet_step, p.hot_blocks, p.hit_fracs[0], migrated, overlap)
+        self.history.append(epoch)
+        return epoch
+
+    # ------------------------------------------------------------------
+    @property
+    def converged(self) -> bool:
+        """Plan is stable once consecutive near-sets mostly agree."""
+        return len(self.history) >= 2 and self.history[-1].overlap_prev >= 0.8
+
+    def convergence_trace(self) -> List[float]:
+        return [e.overlap_prev for e in self.history]

@@ -1,0 +1,102 @@
+"""One serving host in the fleet: a ServingEngine plus its export surface.
+
+The paper profiles the *same code running on many hosts*; the fleet layer's
+unit of aggregation is therefore one engine with (a) live ground-truth
+counters (a CacheSim fed every block access, the "production counters" of
+Table 6) and (b) the windowed MemTracer / AccessProfiler state the
+aggregator stitches into one representative fleet view (§6.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.memtrace import CacheSim, TraceWindow
+from repro.data.requests import Request
+from repro.runtime.serving import EngineConfig, ServingEngine
+
+
+@dataclasses.dataclass
+class ReplicaProfile:
+    """Per-host MemProf export consumed by fleet/aggregator.py."""
+
+    rid: int
+    counts: np.ndarray  # (n_pages,) total kv accesses per logical page
+    windows: List[TraceWindow]  # raw attach/detach trace windows
+    reads: int
+    writes: int
+    live_hit_ratio: float  # live LRU hit ratio (ground truth, not sampled)
+    live_accesses: int
+    live_capacity: int  # blocks in the live cache (sizes the validation sim)
+    near_hit_rate: float
+
+    @property
+    def n_pages(self) -> int:
+        """Size of this host's physical page-id space."""
+        return int(self.counts.size)
+
+
+class Replica:
+    """A ServingEngine with fleet hooks attached.
+
+    ``live_cache_blocks`` sizes the per-host live cache simulator used as
+    ground truth when validating the stitched fleet trace — it plays the
+    role of the paper's hardware hit-ratio counters.
+    """
+
+    def __init__(self, rid: int, engine: ServingEngine, live_cache_blocks: int = 128):
+        self.rid = rid
+        self.engine = engine
+        self.live_cache_blocks = live_cache_blocks
+        self.live_sim = CacheSim(live_cache_blocks)
+        engine.access_hooks.append(self._on_access)
+
+    def _on_access(self, pages: np.ndarray, is_write: bool):
+        for p in np.asarray(pages).reshape(-1):
+            self.live_sim.access(int(p))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.engine.submit(req)
+
+    def step(self) -> int:
+        return self.engine.step()
+
+    @property
+    def load(self) -> int:
+        return self.engine.load
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.engine.queue)
+
+    @property
+    def idle(self) -> bool:
+        return self.engine.load == 0
+
+    def apply_placement(self, near_ids: np.ndarray) -> int:
+        self.engine.external_placement = True
+        return self.engine.apply_placement(near_ids)
+
+    # ------------------------------------------------------------------
+    def export_profile(self) -> ReplicaProfile:
+        eng = self.engine
+        eng.tracer.stitch()  # flush any open window into tracer.windows
+        live = eng.live_counters()
+        sim = self.live_sim
+        return ReplicaProfile(
+            rid=self.rid,
+            counts=eng.profiler.counts("kv").copy(),
+            windows=list(eng.tracer.windows),
+            reads=live["reads"],
+            writes=live["writes"],
+            live_hit_ratio=sim.hits / max(sim.hits + sim.misses, 1),
+            live_accesses=sim.hits + sim.misses,
+            live_capacity=self.live_cache_blocks,
+            near_hit_rate=live["near_hit_rate"],
+        )
+
+    def stats(self) -> dict:
+        return self.engine.stats()

@@ -100,12 +100,31 @@ def _sp_gather(cfg: ModelConfig, x):
     return x
 
 
+@jax.custom_vjp
+def _grad_barrier(h):
+    return jax.lax.optimization_barrier(h)
+
+
+def _grad_barrier_fwd(h):
+    return jax.lax.optimization_barrier(h), None
+
+
+def _grad_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+# jax 0.4.x has no differentiation rule for optimization_barrier; the barrier
+# is identity-valued, so route gradients through a barrier of their own
+# (keeps the hoisting protection on the backward pass too).
+_grad_barrier.defvjp(_grad_barrier_fwd, _grad_barrier_bwd)
+
+
 def _block_train(cfg: ModelConfig, h, layer, positions, mrope_positions, block_k):
     layer = common.constrain_tree(layer, layer_specs(cfg), common.dt(cfg.compute_dtype))  # cast + JIT per-layer gather
     # barrier: stops XLA hoisting the bf16->f32 norm upcast of the saved
     # residual out of the backward loop (which would materialize the WHOLE
     # (L, B, S, D) remat stack in f32 — 2x the largest train buffer)
-    h = jax.lax.optimization_barrier(h)
+    h = _grad_barrier(h)
     x = common.rms_norm(h, layer["ln1"], cfg.norm_eps)  # attention is SP-native
     h = h + attention.apply_train(layer["attn"], cfg, x, positions, mrope_positions, block_k=block_k)
     x = _sp_gather(cfg, common.rms_norm(h, layer["ln2"], cfg.norm_eps))

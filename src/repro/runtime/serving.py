@@ -21,7 +21,7 @@ paged_attention kernel is the device-side fast path for dense archs
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +90,17 @@ class ServingEngine:
         self.prefill_tokens_saved = 0  # shared-prefix pages not recomputed/stored
         self.engine_steps = 0
         self.next_tokens = np.zeros((e.max_batch,), np.int32)
-        self._decode = jax.jit(api.decode)
+        # fleet hooks: called with (page_ids, is_write) for every accounted
+        # block access — replicas attach live counters (CacheSim) here
+        self.access_hooks: List[Callable] = []
+        # when True, a fleet-level planner owns placement (apply_placement);
+        # the local TPP epoch is suppressed so the two don't fight
+        self.external_placement = False
+        # one jitted decode shared by every engine on the same ModelAPI
+        # (a replica fleet compiles once, not once per replica)
+        if not hasattr(api, "_jit_decode"):
+            api._jit_decode = jax.jit(api.decode)
+        self._decode = api._jit_decode
         self._rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------
@@ -165,6 +175,8 @@ class ServingEngine:
             self.prefetch.access_many(pages, far)
             self.profiler.record("kv", pages)
             self.tracer.record(pages, is_write=False)
+            for hook in self.access_hooks:
+                hook(pages, False)
 
     def step(self) -> int:
         """One engine iteration: admit -> decode -> account -> retire.
@@ -182,10 +194,11 @@ class ServingEngine:
         )
         self._account_decode()
         decoded = 0
+        written: List[int] = []
         for slot in self.slots:
             if not slot.active:
                 continue
-            self.pagetable.append_token(slot.seq_id)
+            written.append(self.pagetable.append_token(slot.seq_id))
             slot.remaining -= 1
             decoded += 1
             if slot.remaining <= 0:
@@ -193,12 +206,20 @@ class ServingEngine:
                 self.finished.append(slot.seq_id)
                 slot.seq_id = -1
                 slot.request = None
+        if written:
+            # the decoded token's KV write — gives the access stream a real
+            # R:W mix (Table 6 validation compares read:write ratios)
+            w = np.asarray(written, np.int64)
+            self.profiler.record("kv", w, rw="w")
+            self.tracer.record(w, is_write=True)
+            for hook in self.access_hooks:
+                hook(w, True)
         self.tokens_decoded += decoded
         self.engine_steps += 1
         self.profiler.tick()
         self.tracer.tick()
-        # TPP epoch at window boundaries
-        if self.engine_steps % self.ecfg.placement_window == 0:
+        # TPP epoch at window boundaries (skipped when a fleet planner drives)
+        if not self.external_placement and self.engine_steps % self.ecfg.placement_window == 0:
             wins = self.profiler.windows("kv")
             if wins:
                 self.placement.step(wins[-1])
@@ -212,6 +233,55 @@ class ServingEngine:
             self.step()
             steps += 1
         return self.stats()
+
+    # ------------------------------------------------------------------
+    # fleet interface (fleet/replica.py wraps these)
+
+    @property
+    def load(self) -> int:
+        """Backlog metric for routing: busy slots + queued requests."""
+        return sum(1 for s in self.slots if s.active) + len(self.queue)
+
+    def backlog_tokens(self, prefill_weight: float = 1.0) -> float:
+        """Pending work in token-equivalents (admission's backlog estimate).
+
+        ``prefill_weight`` discounts queued prompt tokens the same way the
+        caller's SLO cost model does (prefill is one batched pass, decode
+        is one slot-step per token).
+        """
+        q = sum(prefill_weight * len(r.tokens) + r.decode_len for r in self.queue)
+        return q + sum(s.remaining for s in self.slots if s.active)
+
+    def apply_placement(self, near_ids: np.ndarray) -> int:
+        """Push an externally-planned near-tier set (fleet autotier).
+
+        Replaces the local TPP view wholesale; returns number of pages whose
+        tier changed (the migration traffic this push costs).
+        """
+        near_ids = np.asarray(near_ids, np.int64).reshape(-1)
+        near_ids = near_ids[(near_ids >= 0) & (near_ids < self.ecfg.n_pages)]
+        near_ids = near_ids[: self.placement.near_capacity]
+        old = self.placement.tier.copy()
+        self.placement.tier[:] = 1
+        self.placement.tier[near_ids] = 0
+        promoted = int((old[near_ids] == 1).sum())
+        demoted = int(((old == 0) & (self.placement.tier == 1)).sum())
+        st = self.placement.stats
+        st.promotions += promoted
+        st.demotions += demoted
+        st.migrated_bytes += (promoted + demoted) * self.placement.block_bytes
+        return promoted + demoted
+
+    def live_counters(self) -> dict:
+        """Ground-truth counters the fleet aggregator validates against."""
+        kv = self.profiler._stream("kv")
+        return {
+            "reads": kv.reads,
+            "writes": kv.writes,
+            "rw_ratio": self.profiler.rw_ratio("kv"),
+            "near_hit_rate": self.placement.stats.hit_rate,
+            "accesses": int(kv.counts.sum()),
+        }
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
