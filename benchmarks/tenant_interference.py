@@ -1,0 +1,186 @@
+"""Cross-tenant interference study: the paper's co-location experiment in
+miniature (arXiv 2303.08396 §2/§5; cloud-tenant interference per 1611.10316).
+
+Two contrasting services share one fleet:
+
+* **web**   — Web1-like: high shared-template rate, longer prompts, steady
+  arrivals. Its near-tier value comes from prefix sharing + template-hot
+  KV pages.
+* **cache** — Cache1-like: Zipf point lookups, tiny prompts, bursty
+  arrivals (4x the web arrival rate). Its hot set is narrow and deep.
+
+Each tenant is first served SOLO (whole fleet, whole near tier to itself),
+then CO-LOCATED through the same-sized fleet with per-tenant SLOs and
+weighted-fair dispatch. Reported per tenant:
+
+* hot-fraction — share of its traffic its top-10% pages carry (per-tenant
+  fleet histogram, aggregator.aggregate_tenant_counts);
+* shed rate — per-tenant admission sheds (one tenant's burst must land in
+  its own shed rate, not its neighbor's);
+* near-hit solo vs co-located — the degradation is the interference: the
+  shared near tier is planned from the COMBINED histogram, so each
+  tenant's realized near-hit drops when the other's hot pages crowd it.
+
+Deterministic under a fixed seed; tests/test_tenancy.py pins that.
+
+PYTHONPATH=src python -m benchmarks.run tenant_interference
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator, interleave
+from repro.fleet import (
+    AdmissionController,
+    SLOModel,
+    aggregate_counts,
+    aggregate_tenant_counts,
+    build_fleet,
+    export_all,
+    fleet_report,
+    fleet_vocab,
+)
+
+from _common import fmt_table
+
+N_REPLICAS = 2
+# a deliberately tight near tier: each replica's live KV footprint
+# (max_batch x ~3 pages/seq) exceeds its near capacity, so tenants actually
+# contend for it (no contention, no study)
+N_PAGES = 64
+NEAR_FRAC = 0.125
+MAX_BATCH = 6
+
+# tenant -> (profile overrides, arrival rate, SLO, fair-share weight)
+TENANTS = {
+    "web": dict(
+        base="Web1",
+        overrides=dict(prompt_mean=24, decode_mean=16, prefix_share=0.9, n_prefixes=3),
+        rate=8.0,
+        slo=SLOModel(max_delay_steps=96.0),
+        weight=1.0,
+    ),
+    "cache": dict(
+        base="Cache1",
+        overrides=dict(prompt_mean=8, decode_mean=6, prefix_share=0.0, n_prefixes=4),
+        rate=32.0,
+        slo=SLOModel(max_delay_steps=12.0),
+        weight=1.0,
+    ),
+}
+
+
+def _generator(tenant: str, seed: int) -> RequestGenerator:
+    spec = TENANTS[tenant]
+    prof = dataclasses.replace(get_profile(spec["base"]), **spec["overrides"])
+    return RequestGenerator(
+        prof, vocab_size=fleet_vocab(), seed=seed, rate=spec["rate"], tenant=tenant
+    )
+
+
+def _build(tenants) -> "FleetRouter":
+    """Fleet for the given tenant subset — a solo run must carry ONLY its
+    own tenant's weight, or its admission fair-share is not actually 1.0."""
+    return build_fleet(
+        N_REPLICAS,
+        policy="prefix-affinity",
+        n_pages=N_PAGES,
+        near_frac=NEAR_FRAC,
+        max_batch=MAX_BATCH,
+        trace_window=16,
+        trace_period=32,
+        admission=AdmissionController(
+            SLOModel(max_delay_steps=64.0),
+            tenant_slos={t: TENANTS[t]["slo"] for t in tenants},
+        ),
+        autotier=dict(near_frac=NEAR_FRAC, epoch_steps=8),
+        tenant_weights={t: TENANTS[t]["weight"] for t in tenants},
+    )
+
+
+def _tenant_metrics(fleet, stats) -> dict:
+    rep = fleet_report(export_all(fleet.replicas))
+    out = {}
+    for t, ts in stats["tenants"].items():
+        out[t] = {
+            "near_hit_rate": ts["near_hit_rate"],
+            "shed_rate": ts["shed_rate"],
+            "requests_finished": ts["requests_finished"],
+            "hot_frac_10pct": rep["tenants"].get(t, {}).get("hot", {}).get(0.1, 0.0),
+        }
+    return out
+
+
+def run_solo(tenant: str, seed: int = 0, n_requests: int = 16) -> dict:
+    fleet = _build([tenant])
+    gen = _generator(tenant, seed)
+    stats = fleet.run(gen, n_requests=n_requests, max_steps=600, submit_per_step=2)
+    return _tenant_metrics(fleet, stats)[tenant]
+
+
+def run_colocated(seed: int = 0, n_requests: int = 32) -> dict:
+    fleet = _build(sorted(TENANTS))
+    gens = [_generator(t, seed + i) for i, t in enumerate(sorted(TENANTS))]
+    reqs = interleave(gens, n_requests)
+    stats = fleet.run(iter(reqs), n_requests=n_requests, max_steps=600, submit_per_step=2)
+    metrics = _tenant_metrics(fleet, stats)
+    # sanity: per-tenant fleet histograms must partition the combined one
+    profiles = export_all(fleet.replicas)
+    combined = aggregate_counts(profiles)
+    by_tenant = aggregate_tenant_counts(profiles)
+    if by_tenant:
+        summed = np.sum([c for c in by_tenant.values()], axis=0)
+        if not np.array_equal(summed, combined):
+            raise AssertionError("tenant histograms do not sum to combined histogram")
+    return metrics
+
+
+def run_study(seed: int = 0, n_requests_solo: int = 16, n_requests_colo: int = 32) -> dict:
+    solo = {t: run_solo(t, seed=seed, n_requests=n_requests_solo) for t in sorted(TENANTS)}
+    colo = run_colocated(seed=seed, n_requests=n_requests_colo)
+    degradation = {
+        t: solo[t]["near_hit_rate"] - colo.get(t, {}).get("near_hit_rate", 0.0)
+        for t in sorted(TENANTS)
+    }
+    return {"solo": solo, "colocated": colo, "near_hit_degradation": degradation}
+
+
+def main():
+    res = run_study()
+    rows = []
+    for t in sorted(TENANTS):
+        s, c = res["solo"][t], res["colocated"].get(t, {})
+        rows.append(
+            (
+                t,
+                f"{s['hot_frac_10pct']:.3f}",
+                f"{s['near_hit_rate']:.3f}",
+                f"{c.get('near_hit_rate', float('nan')):.3f}",
+                f"{res['near_hit_degradation'][t]:+.3f}",
+                f"{s['shed_rate']:.3f}",
+                f"{c.get('shed_rate', float('nan')):.3f}",
+            )
+        )
+    print("tenant interference: solo vs co-located on one fleet "
+          f"({N_REPLICAS} replicas, shared near tier)")
+    print(
+        fmt_table(
+            rows,
+            ("tenant", "hot-10%", "near-hit-solo", "near-hit-colo",
+             "degradation", "shed-solo", "shed-colo"),
+        )
+    )
+    if any(not np.isfinite(v) for v in res["near_hit_degradation"].values()):
+        print("tenant_interference: FAIL (non-finite degradation)")
+        return 1
+    if set(res["colocated"]) != set(TENANTS):
+        print("tenant_interference: FAIL (a tenant was starved out of the co-located run)")
+        return 1
+    print("tenant_interference ok")
+    return res
+
+
+if __name__ == "__main__":
+    rc = main()
+    raise SystemExit(rc if isinstance(rc, int) else 0)

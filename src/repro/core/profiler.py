@@ -82,6 +82,14 @@ class AccessProfiler:
                     cur[:] = 0
 
     # ------------------------------------------------------------------
+    def streams(self, prefix: str = "") -> list:
+        """Registered stream names, optionally filtered by prefix.
+
+        Tenant-scoped streams use dotted names ("kv.web"); the fleet export
+        enumerates them here instead of reaching into private state.
+        """
+        return sorted(n for n in self._streams if n.startswith(prefix))
+
     def counts(self, stream: str) -> np.ndarray:
         return self._stream(stream).counts
 

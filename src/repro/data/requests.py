@@ -8,7 +8,7 @@ backend-bound. Deterministic per (profile, seed, index).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -22,12 +22,21 @@ class Request:
     decode_len: int
     prefix_id: int  # -1 if unique prompt
     arrival: float
+    tenant: str = "default"  # service identity for multi-tenant fleets
 
 
 class RequestGenerator:
-    def __init__(self, profile: WorkloadProfile, vocab_size: int, seed: int = 0, rate: float = 8.0):
+    def __init__(
+        self,
+        profile: WorkloadProfile,
+        vocab_size: int,
+        seed: int = 0,
+        rate: float = 8.0,
+        tenant: Optional[str] = None,
+    ):
         self.p = profile
         self.vocab = vocab_size
+        self.tenant = tenant if tenant is not None else "default"
         self.rng = np.random.default_rng(seed)
         self.rate = rate
         self._prefixes = [
@@ -60,7 +69,7 @@ class RequestGenerator:
             n = max(4, int(self.rng.exponential(p.prompt_mean)))
             tokens = self.rng.integers(0, self.vocab, size=n).astype(np.int32)
         decode_len = max(1, int(self.rng.exponential(p.decode_mean)))
-        return Request(rid, tokens, decode_len, pid, self._clock)
+        return Request(rid, tokens, decode_len, pid, self._clock, self.tenant)
 
     def block_stream(self, n: int, n_blocks: Optional[int] = None, n_streams: int = 4) -> np.ndarray:
         """State-block access stream for this service — MemProf.MemBW's
@@ -90,3 +99,23 @@ class RequestGenerator:
                 pos[s] = (pos[s] + 1) % nb
             out[i] = pos[s]
         return out
+
+
+def interleave(gens: Sequence[RequestGenerator], n: int) -> List[Request]:
+    """Merge ``n`` requests from several tenant generators by arrival time.
+
+    The co-location traffic model: each tenant keeps its own Poisson clock
+    and the fleet sees the time-ordered merge. Request ids are reassigned so
+    sequence ids stay unique fleet-wide, and shared-prefix ids are namespaced
+    per tenant so one tenant's hot template can't alias another's in
+    prefix-affinity routing. Deterministic given the generators' seeds.
+    """
+    heads = [next(g) for g in gens]
+    out: List[Request] = []
+    for rid in range(n):
+        g = min(range(len(gens)), key=lambda i: (heads[i].arrival, i))
+        req = heads[g]
+        pid = req.prefix_id if req.prefix_id < 0 else req.prefix_id * len(gens) + g
+        out.append(dataclasses.replace(req, rid=rid, prefix_id=pid))
+        heads[g] = next(gens[g])
+    return out

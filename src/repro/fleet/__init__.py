@@ -30,6 +30,7 @@ import jax
 from repro.fleet.admission import AdmissionController, SLOModel
 from repro.fleet.aggregator import (
     aggregate_counts,
+    aggregate_tenant_counts,
     export_all,
     fleet_report,
     live_fleet_counters,
@@ -61,6 +62,7 @@ __all__ = [
     "POLICIES",
     "simulated_throughput",
     "aggregate_counts",
+    "aggregate_tenant_counts",
     "export_all",
     "fleet_report",
     "live_fleet_counters",
@@ -80,13 +82,17 @@ def build_fleet(
     autotier: Optional[dict] = None,
     live_cache_blocks: int = 128,
     seed: int = 0,
+    tenant_weights: Optional[dict] = None,
     **engine_kwargs,
 ) -> FleetRouter:
     """Construct N replicas sharing one model (params + jitted decode),
     a router with the named policy, and optionally admission/autotiering.
 
     ``autotier`` kwargs (near_frac, epoch_steps) attach an AutoTierer as an
-    on_step hook and return it as ``router.autotierer``.
+    on_step hook and return it as ``router.autotierer``. ``tenant_weights``
+    sets the router's weighted-fair dispatch shares for multi-tenant
+    traffic (see fleet/router.py); per-tenant SLOs live on the
+    AdmissionController (``tenant_slos``).
     """
     from repro.configs import get_config
     from repro.models.api import get_model
@@ -105,7 +111,9 @@ def build_fleet(
         Replica(i, ServingEngine(api, params, EngineConfig(**kw), seed=seed + i), live_cache_blocks)
         for i in range(n_replicas)
     ]
-    router = FleetRouter(replicas, POLICIES[policy](), admission=admission)
+    router = FleetRouter(
+        replicas, POLICIES[policy](), admission=admission, tenant_weights=tenant_weights
+    )
     router.autotierer = None
     if autotier is not None:
         router.autotierer = AutoTierer(replicas, **autotier)

@@ -7,11 +7,19 @@ request as (prefill + decode) token-equivalents of work, estimates the
 fleet's service rate from its slot capacity, and admits only while the
 projected queueing delay stays inside the SLO. Shed requests are counted,
 not errored: an overloaded fleet degrades by rejecting at the door.
+
+Multi-tenant: each tenant may carry its own ``SLOModel`` (a latency-tight
+cache tenant sheds earlier than a throughput web tenant), and offered /
+admitted are accounted per tenant so one tenant's burst shows up in *its*
+shed rate, not its neighbors'. A tenant's own queued-but-undispatched work
+is charged against its fair share of the fleet rate (``weight_share``), so
+the projection a burst tenant sees inflates with its own backlog while
+other tenants keep admitting against the shared engine backlog only.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List, Optional
 
 from repro.data.requests import Request
 
@@ -32,10 +40,16 @@ class SLOModel:
 
 
 class AdmissionController:
-    def __init__(self, slo: SLOModel):
+    def __init__(self, slo: SLOModel, tenant_slos: Optional[Dict[str, SLOModel]] = None):
         self.slo = slo
+        self.tenant_slos = dict(tenant_slos or {})
         self.offered = 0
         self.admitted = 0
+        self.offered_by: Dict[str, int] = {}
+        self.admitted_by: Dict[str, int] = {}
+
+    def slo_for(self, tenant: str) -> SLOModel:
+        return self.tenant_slos.get(tenant, self.slo)
 
     @property
     def shed(self) -> int:
@@ -45,6 +59,22 @@ class AdmissionController:
     def shed_rate(self) -> float:
         return self.shed / max(self.offered, 1)
 
+    def tenant_stats(self) -> Dict[str, dict]:
+        out = {}
+        for t, off in self.offered_by.items():
+            adm = self.admitted_by.get(t, 0)
+            out[t] = {
+                "offered": off,
+                "admitted": adm,
+                "shed": off - adm,
+                "shed_rate": (off - adm) / max(off, 1),
+            }
+        return out
+
+    def fleet_rate(self, replicas: List) -> int:
+        """Ideal service rate in tokens/step: total decode slots."""
+        return sum(len(r.engine.slots) for r in replicas)
+
     def backlog_steps(self, replicas: List) -> float:
         """Projected steps to drain the fleet's queued work at full rate.
 
@@ -52,14 +82,37 @@ class AdmissionController:
         ``request_cost`` so admission and its SLO share one cost model.
         """
         work = sum(r.engine.backlog_tokens(self.slo.prefill_weight) for r in replicas)
-        rate = sum(len(r.engine.slots) for r in replicas)  # tokens/step ideal
-        return work / max(rate, 1)
+        return work / max(self.fleet_rate(replicas), 1)
 
-    def admit(self, req: Request, replicas: List) -> bool:
+    def admit(
+        self,
+        req: Request,
+        replicas: List,
+        tenant_backlog_tokens: float = 0.0,
+        weight_share: float = 1.0,
+    ) -> bool:
+        """Admit/shed one request against its tenant's SLO.
+
+        ``tenant_backlog_tokens`` is work the tenant has offered but the
+        router has not yet dispatched; it drains at the tenant's weighted
+        fair share of the fleet rate, not the whole rate.
+        """
+        tenant = getattr(req, "tenant", "default")
         self.offered += 1
-        rate = sum(len(r.engine.slots) for r in replicas)
-        projected = self.backlog_steps(replicas) + self.slo.request_cost(req) / max(rate, 1)
-        if projected > self.slo.max_delay_steps:
+        self.offered_by[tenant] = self.offered_by.get(tenant, 0) + 1
+        rate = self.fleet_rate(replicas)
+        if rate <= 0:
+            # no replicas / no decode slots: nothing can ever be served, so
+            # everything sheds at the door (and no divide-by-zero below)
+            return False
+        slo = self.slo_for(tenant)
+        share_rate = rate * min(max(weight_share, 1e-9), 1.0)
+        projected = (
+            self.backlog_steps(replicas)
+            + (tenant_backlog_tokens + slo.request_cost(req)) / share_rate
+        )
+        if projected > slo.max_delay_steps:
             return False
         self.admitted += 1
+        self.admitted_by[tenant] = self.admitted_by.get(tenant, 0) + 1
         return True

@@ -16,7 +16,7 @@ Two aggregations, mirroring the paper's two planes:
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -35,6 +35,22 @@ def aggregate_counts(profiles: List[ReplicaProfile]) -> np.ndarray:
     out = np.zeros(n, np.int64)
     for p in profiles:
         out[: p.counts.size] += p.counts
+    return out
+
+
+def aggregate_tenant_counts(profiles: List[ReplicaProfile]) -> Dict[str, np.ndarray]:
+    """Per-tenant fleet histograms over the same logical page-id space.
+
+    Summing the returned histograms over tenants reproduces
+    ``aggregate_counts`` exactly: every engine access is recorded once in
+    the combined "kv" stream and once in its tenant's "kv.<t>" stream.
+    """
+    n = max((p.counts.size for p in profiles), default=0)
+    out: Dict[str, np.ndarray] = {}
+    for p in profiles:
+        for t, counts in p.tenant_counts.items():
+            dst = out.setdefault(t, np.zeros(n, np.int64))
+            dst[: counts.size] += counts
     return out
 
 
@@ -95,8 +111,27 @@ def validate_fleet(
 
 
 def fleet_report(profiles: List[ReplicaProfile], capacity_fracs=(0.05, 0.1, 0.25)) -> dict:
-    """The MemProf report over the aggregated fleet histogram (Fig. 9/18)."""
+    """The MemProf report over the aggregated fleet histogram (Fig. 9/18).
+
+    ``tenants`` carries the same hotness profile per tenant plus the
+    access-weighted near-tier hit rate each tenant realized — the combined
+    view drives tiering, the per-tenant views expose who wins and who pays
+    on the shared far tier.
+    """
     counts = aggregate_counts(profiles)
+    tenants = {}
+    for t, tc in aggregate_tenant_counts(profiles).items():
+        weights = [
+            (p.tenant_near_hit.get(t, 0.0), float(p.tenant_counts.get(t, np.zeros(0)).sum()))
+            for p in profiles
+        ]
+        wsum = sum(w for _, w in weights)
+        tenants[t] = {
+            "total_accesses": int(tc.sum()),
+            "hot": {f: distribution.hot_fraction(tc, f) for f in capacity_fracs},
+            "zipf_alpha": distribution.zipf_alpha(tc),
+            "near_hit_rate": sum(h * w for h, w in weights) / max(wsum, 1.0),
+        }
     return {
         "total_accesses": int(counts.sum()),
         "active_frac": float((counts > 0).mean()),
@@ -106,4 +141,5 @@ def fleet_report(profiles: List[ReplicaProfile], capacity_fracs=(0.05, 0.1, 0.25
         "near_hit_rate": float(
             np.mean([p.near_hit_rate for p in profiles]) if profiles else 0.0
         ),
+        "tenants": tenants,
     }

@@ -8,11 +8,18 @@ set to every replica (which suppresses their local TPP loops), so placement
 is driven by the representative profile instead of each engine's noisy
 local view. Under a stationary workload the pushed plan converges: the
 Jaccard overlap of successive near-sets approaches 1.
+
+Multi-tenant: the plan is still made from the COMBINED histogram — the near
+tier is one physical resource — but each epoch also reports the fraction of
+every tenant's accesses the pushed near set would serve. A skew-heavy
+tenant crowding the top-k pushes its neighbors' planned near-hit down;
+that per-tenant spread is the co-location interference signal the
+tenant_interference benchmark measures.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -36,6 +43,8 @@ class TierEpoch:
     near_hit_frac: float  # planned fraction of accesses served near
     migrated_pages: int  # placement changes this push cost, fleet-wide
     overlap_prev: float  # Jaccard vs previous epoch's near set
+    # planned near-served fraction per tenant under the SAME shared near set
+    tenant_near_frac: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class AutoTierer:
@@ -70,7 +79,13 @@ class AutoTierer:
             prev = set(self.history[-1].near_ids.tolist())
             cur = set(p.hot_blocks.tolist())
             overlap = len(prev & cur) / max(len(prev | cur), 1)
-        epoch = TierEpoch(fleet_step, p.hot_blocks, p.hit_fracs[0], migrated, overlap)
+        tenant_frac = {}
+        for t, tc in aggregator.aggregate_tenant_counts(profiles).items():
+            near = tc[p.hot_blocks[p.hot_blocks < tc.size]].sum()
+            tenant_frac[t] = float(near / max(tc.sum(), 1))
+        epoch = TierEpoch(
+            fleet_step, p.hot_blocks, p.hit_fracs[0], migrated, overlap, tenant_frac
+        )
         self.history.append(epoch)
         return epoch
 

@@ -9,7 +9,7 @@ aggregator stitches into one representative fleet view (§6.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -31,6 +31,10 @@ class ReplicaProfile:
     live_accesses: int
     live_capacity: int  # blocks in the live cache (sizes the validation sim)
     near_hit_rate: float
+    # per-tenant views of the same host: access counts over the logical
+    # page space and realized near-tier hit rate (interference surface)
+    tenant_counts: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    tenant_near_hit: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def n_pages(self) -> int:
@@ -86,6 +90,14 @@ class Replica:
         eng.tracer.stitch()  # flush any open window into tracer.windows
         live = eng.live_counters()
         sim = self.live_sim
+        tenants = {
+            name[len("kv."):]: eng.profiler.counts(name).copy()
+            for name in eng.profiler.streams("kv.")
+        }
+        tenant_near = {
+            t: ts["near_hits"] / max(ts["near_hits"] + ts["far_hits"], 1)
+            for t, ts in eng.tenant_stats.items()
+        }
         return ReplicaProfile(
             rid=self.rid,
             counts=eng.profiler.counts("kv").copy(),
@@ -96,6 +108,8 @@ class Replica:
             live_accesses=sim.hits + sim.misses,
             live_capacity=self.live_cache_blocks,
             near_hit_rate=live["near_hit_rate"],
+            tenant_counts=tenants,
+            tenant_near_hit=tenant_near,
         )
 
     def stats(self) -> dict:

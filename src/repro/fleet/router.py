@@ -8,6 +8,13 @@ same-code (same-template) requests to the host already holding those
 translations, so the per-host dedup the paper measures actually happens at
 fleet scale. Round-robin and least-loaded are the controls.
 
+Multi-tenant dispatch: requests are offered into per-tenant queues and a
+weighted-fair pick (virtual-time, deterministic tie-break on tenant name)
+decides which tenant's head request is routed next — *before* replica
+selection. A burst tenant therefore waits behind its own queue while other
+tenants keep dispatching at their weighted share; its overload is charged
+to its own SLO by the admission controller, never to its neighbors'.
+
 ``simulated_throughput`` scores a fleet run with a simple cost model in
 token-equivalents: prefill work not recovered by sharing, plus decode work
 inflated by far-tier latency (hw.TPU_TIERED's relative latencies) — the same
@@ -21,10 +28,12 @@ import numpy as np
 
 from repro.core.hw import TPU_TIERED
 from repro.data.requests import Request, RequestGenerator
-from repro.fleet.admission import AdmissionController
+from repro.fleet.admission import AdmissionController, SLOModel
 from repro.fleet.replica import Replica
 
 FAR_LATENCY_REL = TPU_TIERED[1].latency_rel  # host-DRAM far tier vs HBM
+
+_FALLBACK_SLO = SLOModel()  # cost model for fairness when no admission is set
 
 
 class RoundRobinPolicy:
@@ -87,10 +96,12 @@ POLICIES = {
 
 
 class FleetRouter:
-    """Dispatch + lockstep stepping of the replica set.
+    """Per-tenant queueing + dispatch + lockstep stepping of the replica set.
 
-    ``admission`` (optional) gates every submit; ``on_step`` hooks (e.g. the
-    AutoTierer) run after each fleet step with the global step index.
+    ``admission`` (optional) gates every offer; ``tenant_weights`` sets the
+    weighted-fair dispatch shares (default: equal weights); ``on_step``
+    hooks (e.g. the AutoTierer) run after each fleet step with the global
+    step index.
     """
 
     def __init__(
@@ -98,26 +109,96 @@ class FleetRouter:
         replicas: List[Replica],
         policy,
         admission: Optional[AdmissionController] = None,
+        tenant_weights: Optional[Dict[str, float]] = None,
     ):
         assert replicas
         self.replicas = replicas
         self.policy = policy
         self.admission = admission
+        self.tenant_weights = dict(tenant_weights or {})
+        self.tenant_queues: Dict[str, List[Request]] = {}
+        self._vtime: Dict[str, float] = {}  # weighted-fair virtual time
         self.on_step: List = []
         self.fleet_steps = 0
         self.routed = 0
         self.shed = 0
+        self.routed_by: Dict[str, int] = {}
+        self.shed_by: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> bool:
-        """Route one request; returns False if admission shed it."""
-        if self.admission is not None and not self.admission.admit(req, self.replicas):
+    # tenant bookkeeping
+
+    def _weight(self, tenant: str) -> float:
+        return max(self.tenant_weights.get(tenant, 1.0), 1e-9)
+
+    def _weight_share(self, tenant: str) -> float:
+        """This tenant's fair share among tenants the router knows about."""
+        known = set(self.tenant_queues) | set(self.tenant_weights) | {tenant}
+        total = sum(self._weight(t) for t in known)
+        return self._weight(tenant) / max(total, 1e-9)
+
+    def _tenant_backlog_tokens(self, tenant: str) -> float:
+        slo = self.admission.slo_for(tenant) if self.admission else _FALLBACK_SLO
+        return sum(slo.request_cost(r) for r in self.tenant_queues.get(tenant, ()))
+
+    def queued(self, tenant: Optional[str] = None) -> int:
+        if tenant is not None:
+            return len(self.tenant_queues.get(tenant, ()))
+        return sum(len(q) for q in self.tenant_queues.values())
+
+    # ------------------------------------------------------------------
+    # offer / dispatch
+
+    def offer(self, req: Request) -> bool:
+        """Admission-gate one request into its tenant queue (no routing yet)."""
+        tenant = req.tenant
+        if self.admission is not None and not self.admission.admit(
+            req,
+            self.replicas,
+            tenant_backlog_tokens=self._tenant_backlog_tokens(tenant),
+            weight_share=self._weight_share(tenant),
+        ):
             self.shed += 1
+            self.shed_by[tenant] = self.shed_by.get(tenant, 0) + 1
             return False
-        self.replicas[self.policy.choose(req, self.replicas)].submit(req)
-        self.routed += 1
+        self.tenant_queues.setdefault(tenant, []).append(req)
         return True
 
+    def _pick_tenant(self) -> Optional[str]:
+        ready = [t for t, q in self.tenant_queues.items() if q]
+        if not ready:
+            return None
+        return min(ready, key=lambda t: (self._vtime.get(t, 0.0), t))
+
+    def dispatch(self, budget: Optional[int] = None) -> int:
+        """Route up to ``budget`` queued requests (all, if None) in
+        weighted-fair tenant order; returns number routed."""
+        n = 0
+        while budget is None or n < budget:
+            tenant = self._pick_tenant()
+            if tenant is None:
+                break
+            req = self.tenant_queues[tenant].pop(0)
+            self.replicas[self.policy.choose(req, self.replicas)].submit(req)
+            self.routed += 1
+            self.routed_by[tenant] = self.routed_by.get(tenant, 0) + 1
+            # virtual time advances by inverse weight: a weight-2 tenant is
+            # picked twice as often as a weight-1 tenant under contention
+            self._vtime[tenant] = self._vtime.get(tenant, 0.0) + 1.0 / self._weight(tenant)
+            n += 1
+        return n
+
+    def submit(self, req: Request) -> bool:
+        """Offer + immediately drain the queues; returns False if shed.
+
+        The one-call path used when arrivals are not rate-limited — with a
+        single tenant this is exactly direct routing.
+        """
+        admitted = self.offer(req)
+        self.dispatch()
+        return admitted
+
+    # ------------------------------------------------------------------
     def step(self) -> int:
         decoded = sum(r.step() for r in self.replicas)
         self.fleet_steps += 1
@@ -126,19 +207,33 @@ class FleetRouter:
         return decoded
 
     @property
+    def free_slots(self) -> int:
+        return sum(
+            sum(1 for s in r.engine.slots if not s.active) for r in self.replicas
+        )
+
+    @property
     def drained(self) -> bool:
-        return all(r.idle for r in self.replicas)
+        return self.queued() == 0 and all(r.idle for r in self.replicas)
 
     def run(
         self,
-        gen: RequestGenerator,
+        gen,
         n_requests: int,
         max_steps: int = 10_000,
         submit_per_step: Optional[int] = None,
     ) -> dict:
         """Serve ``n_requests``: all up-front, or ``submit_per_step`` per
-        fleet step (open-loop arrivals, what admission control acts on)."""
-        pending = [next(gen) for _ in range(n_requests)]
+        fleet step (open-loop arrivals, what admission control acts on).
+
+        ``gen`` is a RequestGenerator or any iterator of Requests (e.g. a
+        multi-tenant ``data.requests.interleave`` merge). In the open-loop
+        path, offered requests wait in per-tenant queues and each step
+        dispatches into the fleet's free decode slots in weighted-fair
+        tenant order.
+        """
+        it = iter(gen)
+        pending = [next(it) for _ in range(n_requests)]
         if submit_per_step is None:
             for req in pending:
                 self.submit(req)
@@ -146,7 +241,8 @@ class FleetRouter:
         steps = 0
         while (pending or not self.drained) and steps < max_steps:
             for _ in range(min(submit_per_step or 0, len(pending))):
-                self.submit(pending.pop(0))
+                self.offer(pending.pop(0))
+            self.dispatch(max(self.free_slots, 0))
             self.step()
             steps += 1
         return self.fleet_stats()
@@ -173,8 +269,33 @@ class FleetRouter:
         agg["shed"] = self.shed
         agg["policy"] = getattr(self.policy, "name", type(self.policy).__name__)
         agg["simulated_throughput"] = simulated_throughput(agg)
+        agg["tenants"] = self.tenant_report(per)
         agg["per_replica"] = per
         return agg
+
+    def tenant_report(self, per_replica_stats: Optional[List[dict]] = None) -> dict:
+        """Fleet-wide per-tenant view: service counts, tier hits, routing."""
+        per = per_replica_stats or [r.stats() for r in self.replicas]
+        out: Dict[str, dict] = {}
+        for s in per:
+            for t, ts in s.get("tenants", {}).items():
+                o = out.setdefault(
+                    t,
+                    {"tokens_decoded": 0, "requests_finished": 0, "near_hits": 0, "far_hits": 0},
+                )
+                for k in ("tokens_decoded", "requests_finished", "near_hits", "far_hits"):
+                    o[k] += ts[k]
+        for t in set(out) | set(self.routed_by) | set(self.shed_by):
+            o = out.setdefault(
+                t,
+                {"tokens_decoded": 0, "requests_finished": 0, "near_hits": 0, "far_hits": 0},
+            )
+            o["near_hit_rate"] = o["near_hits"] / max(o["near_hits"] + o["far_hits"], 1)
+            o["routed"] = self.routed_by.get(t, 0)
+            o["shed"] = self.shed_by.get(t, 0)
+            o["shed_rate"] = o["shed"] / max(o["routed"] + o["shed"], 1)
+            o["queued"] = self.queued(t)
+        return out
 
 
 def simulated_throughput(stats: dict) -> float:

@@ -89,6 +89,10 @@ class ServingEngine:
         self.prefill_tokens = 0
         self.prefill_tokens_saved = 0  # shared-prefix pages not recomputed/stored
         self.engine_steps = 0
+        # per-tenant accounting: profiler streams are "kv.<tenant>", tier
+        # hits split near/far so fleet reports can expose cross-tenant
+        # interference on the shared far tier
+        self.tenant_stats: Dict[str, Dict[str, int]] = {}
         self.next_tokens = np.zeros((e.max_batch,), np.int32)
         # fleet hooks: called with (page_ids, is_write) for every accounted
         # block access — replicas attach live counters (CacheSim) here
@@ -160,6 +164,16 @@ class ServingEngine:
         self.cache = jax.tree.map(put, self.cache, cache1)
 
     # ------------------------------------------------------------------
+    def _tenant(self, name: str) -> Dict[str, int]:
+        if name not in self.tenant_stats:
+            self.tenant_stats[name] = {
+                "tokens_decoded": 0,
+                "requests_finished": 0,
+                "near_hits": 0,
+                "far_hits": 0,
+            }
+        return self.tenant_stats[name]
+
     def _account_decode(self):
         """Per decode step: every active sequence touches all its KV pages
         (attention reads the whole cache) — that stream drives placement,
@@ -175,6 +189,10 @@ class ServingEngine:
             self.prefetch.access_many(pages, far)
             self.profiler.record("kv", pages)
             self.tracer.record(pages, is_write=False)
+            ts = self._tenant(slot.request.tenant)
+            ts["near_hits"] += int((~far).sum())
+            ts["far_hits"] += int(far.sum())
+            self.profiler.record(f"kv.{slot.request.tenant}", pages)
             for hook in self.access_hooks:
                 hook(pages, False)
 
@@ -195,15 +213,20 @@ class ServingEngine:
         self._account_decode()
         decoded = 0
         written: List[int] = []
+        written_tenant: List[str] = []
         for slot in self.slots:
             if not slot.active:
                 continue
             written.append(self.pagetable.append_token(slot.seq_id))
+            written_tenant.append(slot.request.tenant)
             slot.remaining -= 1
             decoded += 1
+            ts = self._tenant(slot.request.tenant)
+            ts["tokens_decoded"] += 1
             if slot.remaining <= 0:
                 self.pagetable.free_sequence(slot.seq_id)
                 self.finished.append(slot.seq_id)
+                ts["requests_finished"] += 1
                 slot.seq_id = -1
                 slot.request = None
         if written:
@@ -211,6 +234,11 @@ class ServingEngine:
             # R:W mix (Table 6 validation compares read:write ratios)
             w = np.asarray(written, np.int64)
             self.profiler.record("kv", w, rw="w")
+            by_tenant: Dict[str, List[int]] = {}
+            for page, tenant in zip(written, written_tenant):
+                by_tenant.setdefault(tenant, []).append(page)
+            for tenant, pages in by_tenant.items():
+                self.profiler.record(f"kv.{tenant}", np.asarray(pages, np.int64), rw="w")
             self.tracer.record(w, is_write=True)
             for hook in self.access_hooks:
                 hook(w, True)
@@ -297,4 +325,8 @@ class ServingEngine:
             "prefetch_coverage": ps.coverage,
             "prefetch_bw_overhead": ps.bw_overhead,
             "pagetable": self.pagetable.stats(),
+            "tenants": {
+                t: {**ts, "near_hit_rate": ts["near_hits"] / max(ts["near_hits"] + ts["far_hits"], 1)}
+                for t, ts in self.tenant_stats.items()
+            },
         }

@@ -1,0 +1,33 @@
+"""Benchmark registry smoke: every module benchmarks/run.py lists must
+import cleanly and expose a callable ``main`` — a typo'd registration or an
+import-time crash should fail here, not in CI's benchmark stage."""
+import importlib
+import pathlib
+import sys
+
+import pytest
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+sys.path.insert(0, str(BENCH_DIR))
+
+import run as bench_run  # noqa: E402
+
+
+def test_registry_names_resolve_to_files():
+    for name in bench_run.MODULES:
+        assert (BENCH_DIR / f"{name}.py").is_file(), name
+
+
+def test_tenant_interference_is_registered():
+    assert "tenant_interference" in bench_run.MODULES
+
+
+@pytest.mark.parametrize("name", bench_run.MODULES)
+def test_registered_benchmark_importable_and_callable(name):
+    mod = importlib.import_module(name)
+    assert hasattr(mod, "main"), f"{name} has no main()"
+    assert callable(mod.main)
+
+
+def test_selector_rejects_unknown_benchmark():
+    assert bench_run.main(["no-such-benchmark"]) == 2

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.workloads import get_profile
 from repro.core.memtrace import TraceWindow
-from repro.data.requests import RequestGenerator
+from repro.data.requests import Request, RequestGenerator
 from repro.fleet import (
     AdmissionController,
     SLOModel,
@@ -111,13 +111,19 @@ def test_stitch_namespaces_physical_pages():
     assert live["rw_ratio"] == pytest.approx(3.0)
 
 
-def test_fleet_trace_validates_within_5pct():
-    """Acceptance: stitched fleet trace vs live fleet counters (Table 6)."""
-    fleet, stats = run_fleet("prefix-affinity", n_requests=20)
+@pytest.mark.parametrize("policy", ["round-robin", "least-loaded", "prefix-affinity"])
+def test_fleet_trace_validates_within_5pct(policy):
+    """Acceptance: stitched fleet trace vs live fleet counters (Table 6).
+
+    Seeded regression across ALL router policies — the routing decision
+    changes which host's windows dominate the stitched trace, so the <=5%
+    aggregator tolerance must hold per policy or it can silently rot.
+    """
+    fleet, stats = run_fleet(policy, n_requests=20, seed=0)
     val = validate_fleet(export_all(fleet.replicas))
     assert val["trace_len"] > 0
-    assert val["hit_ratio_error"] <= 0.05, val
-    assert abs(val["rw_ratio_error_pct"]) <= 5.0, val
+    assert val["hit_ratio_error"] <= 0.05, (policy, val)
+    assert abs(val["rw_ratio_error_pct"]) <= 5.0, (policy, val)
 
 
 # ---------------------------------------------------------------------------
@@ -180,3 +186,62 @@ def test_admission_admits_everything_under_light_load():
     gen = RequestGenerator(web_profile(), vocab_size=fleet_vocab(), seed=4)
     stats = fleet.run(gen, n_requests=6, max_steps=800)
     assert stats["shed"] == 0 and stats["requests_finished"] == 6
+
+
+# ---------------------------------------------------------------------------
+# admission edge cases (no real engines needed: admission only reads
+# engine.slots and engine.backlog_tokens)
+
+
+class _FakeEngine:
+    def __init__(self, n_slots, backlog=0.0):
+        self.slots = [object()] * n_slots
+        self.backlog = backlog
+
+    def backlog_tokens(self, prefill_weight=1.0):
+        return self.backlog
+
+
+class _FakeReplica:
+    def __init__(self, n_slots, backlog=0.0):
+        self.engine = _FakeEngine(n_slots, backlog)
+
+
+def _req(rid=0, n_tokens=8, decode=4, tenant="default"):
+    return Request(rid, np.zeros(n_tokens, np.int32), decode, -1, 0.0, tenant)
+
+
+def test_admission_zero_replicas_sheds_without_crashing():
+    adm = AdmissionController(SLOModel())
+    assert adm.admit(_req(), []) is False
+    assert adm.offered == 1 and adm.shed == 1 and adm.shed_rate == 1.0
+
+
+def test_admission_zero_slot_replicas_shed_everything():
+    adm = AdmissionController(SLOModel(max_delay_steps=1e9))
+    replicas = [_FakeReplica(0), _FakeReplica(0)]
+    assert adm.admit(_req(), replicas) is False  # rate 0: unservable
+    assert adm.backlog_steps(replicas) == 0.0  # and no divide-by-zero
+
+
+def test_admission_shed_rate_before_any_arrivals():
+    adm = AdmissionController(SLOModel())
+    assert adm.shed_rate == 0.0 and adm.shed == 0
+    assert adm.tenant_stats() == {}
+
+
+def test_admission_burst_must_shed():
+    """Backlog growth pushes the projection over the SLO mid-burst."""
+    adm = AdmissionController(SLOModel(max_delay_steps=8.0, prefill_weight=0.25))
+    replica = _FakeReplica(4)
+    decisions = []
+    for i in range(12):
+        ok = adm.admit(_req(rid=i, n_tokens=8, decode=6), [replica])
+        if ok:  # model the admitted request's work entering the fleet
+            replica.engine.backlog += 0.25 * 8 + 6
+        decisions.append(ok)
+    assert decisions[0] is True  # empty fleet admits
+    assert not all(decisions)  # the burst hits the SLO wall...
+    assert decisions.index(False) == decisions.count(True)  # ...and stays shed
+    assert adm.shed == decisions.count(False)
+    assert 0.0 < adm.shed_rate < 1.0

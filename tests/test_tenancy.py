@@ -1,0 +1,201 @@
+"""Multi-tenant fleet serving: per-tenant SLOs, per-tenant MemProf streams,
+weighted-fair dispatch, and the co-location interference study.
+
+Acceptance (ISSUE 2): two tenants through one fleet get independent shed
+accounting; per-tenant aggregated histograms sum to the combined histogram;
+the interference benchmark reports solo-vs-colocated near-hit degradation
+deterministically under a fixed seed.
+"""
+import dataclasses
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import Request, RequestGenerator, interleave
+from repro.fleet import (
+    AdmissionController,
+    SLOModel,
+    aggregate_counts,
+    aggregate_tenant_counts,
+    build_fleet,
+    export_all,
+    fleet_report,
+    fleet_vocab,
+)
+
+# the interference benchmark is importable the same way benchmarks/run.py
+# loads it (benchmarks/ is a script dir, not a package)
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "benchmarks"))
+import tenant_interference  # noqa: E402
+
+
+def _profile(**kw):
+    base = dict(prompt_mean=16, decode_mean=6, prefix_share=0.8, n_prefixes=3)
+    base.update(kw)
+    return dataclasses.replace(get_profile("Web1"), **base)
+
+
+def _two_tenant_gens(seed=0):
+    web = RequestGenerator(
+        _profile(), vocab_size=fleet_vocab(), seed=seed, rate=8.0, tenant="web"
+    )
+    cache = RequestGenerator(
+        _profile(prefix_share=0.0, prompt_mean=8, decode_mean=4),
+        vocab_size=fleet_vocab(), seed=seed + 1, rate=32.0, tenant="cache",
+    )
+    return [cache, web]
+
+
+# ---------------------------------------------------------------------------
+# tenant identity plumbing
+
+
+def test_request_generator_stamps_tenant():
+    gen = RequestGenerator(_profile(), vocab_size=64, seed=0, tenant="web")
+    assert next(gen).tenant == "web"
+    assert next(RequestGenerator(_profile(), vocab_size=64, seed=0)).tenant == "default"
+
+
+def test_interleave_merges_by_arrival_with_unique_ids():
+    reqs = interleave(_two_tenant_gens(), 40)
+    assert [r.rid for r in reqs] == list(range(40))
+    assert [r.arrival for r in reqs] == sorted(r.arrival for r in reqs)
+    tenants = {r.tenant for r in reqs}
+    assert tenants == {"web", "cache"}
+    # the 4x-rate cache tenant dominates the time-ordered merge
+    n_cache = sum(r.tenant == "cache" for r in reqs)
+    assert n_cache > 20
+    # prefix ids are namespaced per tenant: no cross-tenant aliasing
+    web_pids = {r.prefix_id for r in reqs if r.tenant == "web" and r.prefix_id >= 0}
+    cache_pids = {r.prefix_id for r in reqs if r.tenant == "cache" and r.prefix_id >= 0}
+    assert not (web_pids & cache_pids)
+
+
+# ---------------------------------------------------------------------------
+# weighted-fair dispatch
+
+
+def _fleet(**kw):
+    base = dict(n_pages=128, trace_window=16, trace_period=32)
+    base.update(kw)
+    return build_fleet(2, policy="round-robin", **base)
+
+
+def test_weighted_fair_dispatch_order():
+    fleet = _fleet(tenant_weights={"web": 3.0, "cache": 1.0})
+    for i in range(4):
+        fleet.tenant_queues.setdefault("web", []).append(
+            Request(i, np.zeros(4, np.int32), 2, -1, 0.0, "web")
+        )
+        fleet.tenant_queues.setdefault("cache", []).append(
+            Request(10 + i, np.zeros(4, np.int32), 2, -1, 0.0, "cache")
+        )
+    assert fleet.dispatch(4) == 4
+    # weight 3 tenant gets 3 of the first 4 picks (cache wins the vtime tie
+    # on name, then web runs until its virtual time catches up)
+    assert fleet.routed_by == {"cache": 1, "web": 3}
+    assert fleet.dispatch() == 4  # drain the rest
+    assert fleet.routed_by == {"cache": 4, "web": 4}
+    assert fleet.queued() == 0
+
+
+def test_equal_weights_alternate():
+    fleet = _fleet()
+    for i in range(3):
+        fleet.tenant_queues.setdefault("a", []).append(
+            Request(i, np.zeros(4, np.int32), 2, -1, 0.0, "a")
+        )
+        fleet.tenant_queues.setdefault("b", []).append(
+            Request(10 + i, np.zeros(4, np.int32), 2, -1, 0.0, "b")
+        )
+    fleet.dispatch(4)
+    assert fleet.routed_by == {"a": 2, "b": 2}
+
+
+# ---------------------------------------------------------------------------
+# acceptance: independent shed accounting
+
+
+def test_two_tenants_independent_shed_accounting():
+    adm = AdmissionController(
+        SLOModel(max_delay_steps=64.0),
+        tenant_slos={"cache": SLOModel(max_delay_steps=4.0),
+                     "web": SLOModel(max_delay_steps=1e6)},
+    )
+    fleet = _fleet(admission=adm)
+    reqs = interleave(_two_tenant_gens(), 40)
+    stats = fleet.run(iter(reqs), n_requests=40, max_steps=800)
+    ts = adm.tenant_stats()
+    assert set(ts) == {"web", "cache"}
+    # the bursty, latency-tight tenant sheds; its neighbor does not
+    assert ts["cache"]["shed"] > 0
+    assert ts["web"]["shed"] == 0
+    # per-tenant books balance and sum to the fleet totals
+    for t in ts:
+        assert ts[t]["offered"] == ts[t]["admitted"] + ts[t]["shed"]
+        assert stats["tenants"][t]["shed"] == ts[t]["shed"]
+    assert adm.shed == sum(v["shed"] for v in ts.values()) == stats["shed"]
+    assert adm.offered == 40
+    # everything admitted was served
+    assert stats["requests_finished"] == stats["routed"] == adm.admitted
+
+
+# ---------------------------------------------------------------------------
+# acceptance: per-tenant histograms partition the combined histogram
+
+
+def test_tenant_histograms_sum_to_combined():
+    fleet = _fleet(autotier=dict(near_frac=0.3, epoch_steps=8))
+    reqs = interleave(_two_tenant_gens(), 24)
+    fleet.run(iter(reqs), n_requests=24, max_steps=800, submit_per_step=2)
+    profiles = export_all(fleet.replicas)
+    by_tenant = aggregate_tenant_counts(profiles)
+    assert set(by_tenant) == {"web", "cache"}
+    combined = aggregate_counts(profiles)
+    np.testing.assert_array_equal(
+        np.sum([c for c in by_tenant.values()], axis=0), combined
+    )
+    # and per host, too
+    for p in profiles:
+        np.testing.assert_array_equal(
+            np.sum([c for c in p.tenant_counts.values()], axis=0), p.counts
+        )
+    # fleet report exposes both per-tenant hotness views
+    rep = fleet_report(profiles)
+    assert set(rep["tenants"]) == {"web", "cache"}
+    for t in rep["tenants"]:
+        assert 0.0 <= rep["tenants"][t]["near_hit_rate"] <= 1.0
+        assert rep["tenants"][t]["total_accesses"] > 0
+
+
+def test_autotier_reports_per_tenant_near_fracs():
+    fleet = _fleet(autotier=dict(near_frac=0.3, epoch_steps=8))
+    reqs = interleave(_two_tenant_gens(), 24)
+    fleet.run(iter(reqs), n_requests=24, max_steps=800, submit_per_step=2)
+    hist = fleet.autotierer.history
+    assert hist
+    last = hist[-1]
+    assert set(last.tenant_near_frac) == {"web", "cache"}
+    for frac in last.tenant_near_frac.values():
+        assert 0.0 <= frac <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: interference benchmark is deterministic under a fixed seed
+
+
+@pytest.mark.slow
+def test_interference_benchmark_deterministic():
+    kw = dict(seed=0, n_requests_solo=8, n_requests_colo=16)
+    r1 = tenant_interference.run_study(**kw)
+    r2 = tenant_interference.run_study(**kw)
+    assert r1 == r2
+    assert set(r1["near_hit_degradation"]) == {"web", "cache"}
+    for v in r1["near_hit_degradation"].values():
+        assert np.isfinite(v)
+    for t, m in r1["colocated"].items():
+        assert 0.0 <= m["near_hit_rate"] <= 1.0
+        assert 0.0 <= m["shed_rate"] <= 1.0
