@@ -22,6 +22,7 @@ MODULES = [
     "fig22_prefetch_acc",
     "table6_trace",
     "fleet_bench",
+    "straggler_bench",
     "tenant_interference",
     "kernels_bench",
 ]

@@ -1,0 +1,134 @@
+"""Straggler & elasticity study: event-driven vs lockstep fleet stepping.
+
+Part 1 — the straggler tax. The same seeded open-loop traffic is served by
+4 replicas where host 3 runs 4x slower, once with the legacy lockstep
+barrier (every fleet step costs max(step_cost) — the slow host gates
+everyone) and once with the virtual-time event scheduler (each host posts
+completions on its own clock). Throughput is decoded tokens per unit of
+virtual time over a fixed horizon; the event-driven fleet must win, and
+the homogeneous control must tie exactly (the equivalence guarantee).
+
+Part 2 — burst-driven autoscale. An arrival burst overloads a 2-replica
+elastic fleet; interval shed rate at the admission door triggers scale-up
+(new hosts warm their near tier from the AutoTierer's current fleet plan),
+the post-burst quiet period drains and retires hosts, and the stitched
+fleet trace — including the retired hosts' windows — must still validate
+within the paper's <=5% against live counters.
+"""
+import dataclasses
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator
+from repro.fleet import AdmissionController, SLOModel, build_fleet, fleet_vocab, validate_fleet
+
+from _common import fmt_table
+
+HORIZON = 80  # virtual-time budget per straggler cell
+SPEEDS = {"homogeneous": (1, 1, 1, 1), "4x-straggler": (1, 1, 1, 4)}
+
+
+def _profile():
+    return dataclasses.replace(
+        get_profile("Web1"), prompt_mean=24, decode_mean=6, prefix_share=0.0, n_prefixes=3
+    )
+
+
+def run_straggler_cell(speeds, lockstep: bool, seed: int = 0):
+    fleet = build_fleet(
+        4, policy="least-loaded", speeds=speeds, trace_window=16, trace_period=32, seed=seed
+    )
+    gen = RequestGenerator(_profile(), vocab_size=fleet_vocab(), seed=seed + 1)
+    # both modes must see the same horizon AND the same offered load per
+    # unit of virtual time: a lockstep iteration under the straggler spans
+    # max(speeds) time units, so it gets that many ticks' worth of
+    # arrivals — otherwise the comparison confounds the barrier tax with
+    # arrival volume
+    barrier = int(max(speeds))
+    max_steps = HORIZON // barrier if lockstep else HORIZON
+    per_step = 2 * barrier if lockstep else 2
+    stats = fleet.run(
+        gen, n_requests=140, max_steps=max_steps, submit_per_step=per_step, lockstep=lockstep
+    )
+    tput = stats["tokens_decoded"] / max(stats["virtual_time"], 1e-9)
+    return tput, stats
+
+
+def run_autoscale(seed: int = 0, n_requests: int = 60):
+    fleet = build_fleet(
+        2,
+        policy="least-loaded",
+        trace_window=16,
+        trace_period=32,
+        admission=AdmissionController(SLOModel(max_delay_steps=16.0)),
+        autotier=dict(near_frac=0.30, epoch_steps=4),
+        elastic=dict(
+            min_replicas=2, max_replicas=5, cooldown=3.0,
+            up_shed_rate=0.05, up_backlog_frac=0.6, down_backlog_frac=0.15,
+        ),
+        seed=seed,
+    )
+    prof = dataclasses.replace(_profile(), prefix_share=0.9)
+    gen = RequestGenerator(prof, vocab_size=fleet_vocab(), seed=seed)
+    stats = fleet.run(gen, n_requests=n_requests, max_steps=800, submit_per_step=6)
+    val = validate_fleet(fleet.export_profiles())
+    return stats, val
+
+
+def main():
+    rows, tputs = [], {}
+    for label, speeds in SPEEDS.items():
+        for lockstep in (True, False):
+            mode = "lockstep" if lockstep else "event"
+            tput, stats = run_straggler_cell(speeds, lockstep)
+            tputs[(label, mode)] = tput
+            rows.append(
+                (
+                    label,
+                    mode,
+                    f"{tput:.2f}",
+                    stats["tokens_decoded"],
+                    f"{stats['virtual_time']:.0f}",
+                    stats["requests_finished"],
+                )
+            )
+    print("straggler study: decode throughput (tokens / virtual time), fixed horizon")
+    print(fmt_table(rows, ("speeds", "mode", "tput", "tokens", "vtime", "finished")))
+
+    gain = tputs[("4x-straggler", "event")] / max(tputs[("4x-straggler", "lockstep")], 1e-9)
+    tie = tputs[("homogeneous", "event")] / max(tputs[("homogeneous", "lockstep")], 1e-9)
+    print(f"\nevent-driven vs lockstep under a 4x straggler: {gain:.2f}x")
+    print(f"homogeneous control (must tie, equivalence guarantee): {tie:.3f}x")
+
+    stats, val = run_autoscale()
+    ups = [e for e in stats["scale_events"] if e[1] == "up"]
+    retires = [e for e in stats["scale_events"] if e[1] == "retire"]
+    print(
+        f"\nautoscale: burst of 6 req/tick on 2 replicas -> "
+        f"{len(ups)} scale-up(s), {len(retires)} retire(s); "
+        f"{stats['requests_finished']} finished, {stats['shed']} shed"
+    )
+    for vtime, action, rid in stats["scale_events"]:
+        print(f"  t={vtime:5.1f}  {action:>6}  host {rid}")
+    print(
+        f"  fleet trace across the scale cycle (incl. retired hosts): "
+        f"hit-ratio err {val['hit_ratio_error']*100:.2f}%, "
+        f"R:W err {val['rw_ratio_error_pct']:+.2f}% ({val['trace_len']} accesses)"
+    )
+
+    ok = (
+        gain > 1.5
+        and abs(tie - 1.0) < 1e-9
+        and ups
+        and retires
+        and val["hit_ratio_error"] <= 0.05
+        and abs(val["rw_ratio_error_pct"]) <= 5.0
+    )
+    if not ok:
+        print("straggler_bench: FAIL")
+        return 1
+    print("straggler_bench ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

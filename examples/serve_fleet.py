@@ -25,10 +25,24 @@ A fleet becomes multi-tenant by stamping requests with a tenant name and
   tenant is picked 3x as often as a weight-1 tenant, so one tenant's burst
   waits in its own queue instead of starving its neighbors.
 * Per-tenant observability: ``fleet_stats()["tenants"]`` (service counts,
-  shed rate, realized near-hit), ``fleet_report()["tenants"]`` (per-tenant
-  fleet histograms), and each ``TierEpoch.tenant_near_frac`` (who the
-  shared near tier actually serves). benchmarks/tenant_interference.py
-  turns these into the paper's co-location study.
+  shed rate, realized near-hit, queue-wait p50/p99 in virtual time),
+  ``fleet_report()["tenants"]`` (per-tenant fleet histograms), and each
+  ``TierEpoch.tenant_near_frac`` (who the shared near tier actually
+  serves). benchmarks/tenant_interference.py turns these into the paper's
+  co-location study.
+
+Event-driven stepping + elasticity
+----------------------------------
+Fleet runs are event-driven by default (fleet/scheduler.py): each replica
+posts step completions on its own virtual clock, so a slow host is a slow
+*host*, not a slow *fleet* (``lockstep=True`` keeps the legacy barrier;
+with nominal speeds the two produce identical stats). ``build_fleet`` takes
+``speeds=(1, 1, 1, 4)`` to make host 3 a 4x straggler and
+``elastic=dict(...)`` to let the replica set scale with admission pressure
+— scaled-up hosts warm their near tier from the AutoTierer's current fleet
+plan, and drained hosts fold their MemProf profile into the aggregate
+before retiring. The straggler/autoscale demo below shows both;
+benchmarks/straggler_bench.py is the quantitative study.
 
 PYTHONPATH=src python examples/serve_fleet.py
 """
@@ -118,6 +132,53 @@ def serve_multi_tenant(n_requests: int = 24):
     return stats
 
 
+def serve_straggler_autoscale():
+    """Host 3 runs 4x slow; a burst then scales an elastic fleet up/down."""
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=24, decode_mean=6, prefix_share=0.9, n_prefixes=3
+    )
+    # straggler: barrier vs event-driven over a fixed 40-unit horizon, with
+    # the same offered load per unit virtual time (a lockstep iteration
+    # spans 4 units under the 4x straggler, so it gets 4 ticks' arrivals)
+    tput = {}
+    for lockstep in (True, False):
+        fleet = build_fleet(
+            N_REPLICAS, policy="least-loaded", speeds=(1, 1, 1, 4), n_pages=N_PAGES,
+            trace_window=16, trace_period=32,
+        )
+        gen = RequestGenerator(prof, vocab_size=fleet_vocab(), seed=0)
+        stats = fleet.run(
+            gen, n_requests=60, max_steps=10 if lockstep else 40,
+            submit_per_step=8 if lockstep else 2, lockstep=lockstep,
+        )
+        mode = "lockstep" if lockstep else "event"
+        tput[mode] = stats["tokens_decoded"] / max(stats["virtual_time"], 1e-9)
+        print(f"[straggler/{mode}] {tput[mode]:.2f} tokens per unit virtual time "
+              f"({stats['tokens_decoded']} tokens in {stats['virtual_time']:.0f})")
+    print(f"  4x straggler: event-driven wins {tput['event'] / tput['lockstep']:.2f}x "
+          f"(the barrier pays max(step_cost) every fleet step)")
+
+    # autoscale: a 6 req/tick burst on 2 replicas, then drain + retire
+    fleet = build_fleet(
+        2, policy="least-loaded", n_pages=N_PAGES, trace_window=16, trace_period=32,
+        admission=AdmissionController(SLOModel(max_delay_steps=16.0)),
+        autotier=dict(near_frac=0.30, epoch_steps=4),
+        elastic=dict(min_replicas=2, max_replicas=5, cooldown=3.0,
+                     up_shed_rate=0.05, up_backlog_frac=0.6, down_backlog_frac=0.15),
+    )
+    gen = RequestGenerator(prof, vocab_size=fleet_vocab(), seed=0)
+    stats = fleet.run(gen, n_requests=60, max_steps=400, submit_per_step=6)
+    print(f"[autoscale] {stats['requests_finished']} finished, {stats['shed']} shed; "
+          f"scale events:")
+    for vtime, action, rid in stats["scale_events"]:
+        print(f"  t={vtime:5.1f}  {action:>6}  host {rid}")
+    val = validate_fleet(fleet.export_profiles())
+    print(f"  stitched trace across the scale cycle (incl. retired hosts): "
+          f"hit-ratio err {val['hit_ratio_error']*100:.2f}%, "
+          f"R:W err {val['rw_ratio_error_pct']:+.2f}%")
+    return stats, val
+
+
 def main():
     rr, _ = serve("round-robin")
     print()
@@ -129,6 +190,10 @@ def main():
     print()
     mt = serve_multi_tenant()
     assert set(mt["tenants"]) == {"web", "cache"}, mt["tenants"]
+    print()
+    sa, sval = serve_straggler_autoscale()
+    assert any(e[1] == "up" for e in sa["scale_events"]), sa["scale_events"]
+    assert sval["hit_ratio_error"] <= 0.05 and abs(sval["rw_ratio_error_pct"]) <= 5.0, sval
     print("serve_fleet ok")
 
 

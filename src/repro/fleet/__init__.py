@@ -5,25 +5,38 @@ hosts, and both its profiler and its tracer only become *representative*
 when aggregated across them. Module -> paper-section map:
 
 * ``replica.py``  — one profiled host: engine + live hardware-counter
-  analogue (§3's per-host collection; Table 6's "live" column).
+  analogue (§3's per-host collection; Table 6's "live" column), with its
+  own clock/speed factor and a drain protocol for elastic scale-down.
+* ``scheduler.py`` — deterministic virtual-time event loop: per-replica
+  completion events instead of a global barrier, so a straggler slows one
+  host, not the fleet step (per-host heterogeneity is first-order at
+  hyperscale).
 * ``router.py``   — request placement across hosts; prefix-affinity is the
   fleet form of the multi-ASID shared-TLB idea (§4 / Fig. 17): same-template
-  requests land where those KV translations already live.
+  requests land where those KV translations already live. Dispatch runs
+  from weighted-fair tenant queues at every completion batch (lockstep kept
+  as a compatibility mode).
 * ``aggregator.py`` — fleet MemProf: sums per-page counts over hosts
   (§4, Fig. 6/9/18) and stitches short attach/detach trace windows from
   multiple hosts into one representative trace, validated by cache-sim
   replay against live counters (§6.2-§6.3, Table 6).
 * ``autotier.py`` — online re-tiering from the aggregated histogram
-  (§5, Table 4/5): plan on fleet behavior, push placement to every host.
+  (§5, Table 4/5): plan on fleet behavior, push placement to every host;
+  epochs keyed on virtual time over the (possibly changing) replica set.
 * ``admission.py`` — overload sheds at the door instead of pushing the
-  far tier past its latency knee (§2, Fig. 4).
+  far tier past its latency knee (§2, Fig. 4); exports the door-pressure
+  signal elasticity scales on.
+* ``elastic.py``  — replica set scales with load: scale-up warms its near
+  tier from the fleet plan, scale-down drains and folds the host's profile
+  into the aggregate.
 
-``build_fleet`` wires it together; examples/serve_fleet.py is the demo and
-benchmarks/fleet_bench.py the scaling study.
+``build_fleet`` wires it together; examples/serve_fleet.py is the demo,
+benchmarks/fleet_bench.py the scaling study, and
+benchmarks/straggler_bench.py the straggler/elasticity study.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 
@@ -38,6 +51,7 @@ from repro.fleet.aggregator import (
     validate_fleet,
 )
 from repro.fleet.autotier import AutoTierer, TierEpoch
+from repro.fleet.elastic import ElasticFleet, ScaleEvent, restored_params_source
 from repro.fleet.replica import Replica, ReplicaProfile
 from repro.fleet.router import (
     POLICIES,
@@ -47,12 +61,16 @@ from repro.fleet.router import (
     RoundRobinPolicy,
     simulated_throughput,
 )
+from repro.fleet.scheduler import VirtualScheduler
 
 __all__ = [
     "AdmissionController",
     "SLOModel",
     "AutoTierer",
     "TierEpoch",
+    "ElasticFleet",
+    "ScaleEvent",
+    "restored_params_source",
     "Replica",
     "ReplicaProfile",
     "FleetRouter",
@@ -60,6 +78,7 @@ __all__ = [
     "LeastLoadedPolicy",
     "PrefixAffinityPolicy",
     "POLICIES",
+    "VirtualScheduler",
     "simulated_throughput",
     "aggregate_counts",
     "aggregate_tenant_counts",
@@ -80,18 +99,27 @@ def build_fleet(
     arch: str = "smollm-360m",
     admission: Optional[AdmissionController] = None,
     autotier: Optional[dict] = None,
+    elastic: Optional[dict] = None,
     live_cache_blocks: int = 128,
     seed: int = 0,
     tenant_weights: Optional[dict] = None,
+    speeds: Optional[Sequence[float]] = None,
     **engine_kwargs,
 ) -> FleetRouter:
     """Construct N replicas sharing one model (params + jitted decode),
-    a router with the named policy, and optionally admission/autotiering.
+    a router with the named policy, and optionally admission/autotiering/
+    elasticity.
 
     ``autotier`` kwargs (near_frac, epoch_steps) attach an AutoTierer as an
-    on_step hook and return it as ``router.autotierer``. ``tenant_weights``
-    sets the router's weighted-fair dispatch shares for multi-tenant
-    traffic (see fleet/router.py); per-tenant SLOs live on the
+    on_step hook and return it as ``router.autotierer``. ``elastic`` kwargs
+    (min_replicas, max_replicas, thresholds, cooldown; optional
+    ``params_source`` for checkpoint-restored weights) attach an
+    ElasticFleet as ``router.elastic`` — scaled-up replicas are built by
+    the same factory as the initial set and warm their near tier from the
+    AutoTierer's latest plan. ``speeds`` gives per-replica step-cost
+    multipliers (e.g. ``(1, 1, 1, 4)`` for a 4x straggler on host 3).
+    ``tenant_weights`` sets the router's weighted-fair dispatch shares for
+    multi-tenant traffic (see fleet/router.py); per-tenant SLOs live on the
     AdmissionController (``tenant_slos``).
     """
     from repro.configs import get_config
@@ -105,19 +133,33 @@ def build_fleet(
     cfg, api, params = _MODEL_CACHE[arch]
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; choose from {sorted(POLICIES)}")
+    if speeds is not None and len(speeds) != n_replicas:
+        raise ValueError(f"speeds must have one entry per replica ({n_replicas})")
     kw = dict(max_batch=4, max_len=64, n_pages=512)
     kw.update(engine_kwargs)
+    ekw = dict(elastic or {})
+    params_source = ekw.pop("params_source", None)
+
+    def make_replica(rid: int, speed: float = 1.0) -> Replica:
+        p = params_source() if params_source is not None else params
+        eng = ServingEngine(api, p, EngineConfig(**kw), seed=seed + rid)
+        return Replica(rid, eng, live_cache_blocks, speed=speed)
+
     replicas = [
-        Replica(i, ServingEngine(api, params, EngineConfig(**kw), seed=seed + i), live_cache_blocks)
+        make_replica(i, 1.0 if speeds is None else float(speeds[i]))
         for i in range(n_replicas)
     ]
     router = FleetRouter(
         replicas, POLICIES[policy](), admission=admission, tenant_weights=tenant_weights
     )
-    router.autotierer = None
     if autotier is not None:
         router.autotierer = AutoTierer(replicas, **autotier)
         router.on_step.append(router.autotierer)
+    if elastic is not None:
+        router.elastic = ElasticFleet(
+            router, make_replica, autotierer=router.autotierer, **ekw
+        )
+        router.on_step.append(router.elastic)
     return router
 
 

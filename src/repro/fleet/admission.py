@@ -19,6 +19,7 @@ other tenants keep admitting against the shared engine backlog only.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, List, Optional
 
 from repro.data.requests import Request
@@ -40,13 +41,24 @@ class SLOModel:
 
 
 class AdmissionController:
-    def __init__(self, slo: SLOModel, tenant_slos: Optional[Dict[str, SLOModel]] = None):
+    def __init__(
+        self,
+        slo: SLOModel,
+        tenant_slos: Optional[Dict[str, SLOModel]] = None,
+        pressure_window: int = 64,
+    ):
         self.slo = slo
         self.tenant_slos = dict(tenant_slos or {})
         self.offered = 0
         self.admitted = 0
         self.offered_by: Dict[str, int] = {}
         self.admitted_by: Dict[str, int] = {}
+        # sliding window of recent admit/shed decisions, exported via
+        # ``pressure()`` for observability. Note it only decays as NEW
+        # offers arrive — the elastic fleet's scale decisions therefore use
+        # interval deltas of offered/shed sampled at decision times
+        # (fleet/elastic.py), which read zero once a burst ends.
+        self._recent: deque = deque(maxlen=pressure_window)
 
     def slo_for(self, tenant: str) -> SLOModel:
         return self.tenant_slos.get(tenant, self.slo)
@@ -74,6 +86,26 @@ class AdmissionController:
     def fleet_rate(self, replicas: List) -> int:
         """Ideal service rate in tokens/step: total decode slots."""
         return sum(len(r.engine.slots) for r in replicas)
+
+    @property
+    def recent_shed_rate(self) -> float:
+        """Shed fraction over the last ``pressure_window`` offers."""
+        if not self._recent:
+            return 0.0
+        return 1.0 - sum(self._recent) / len(self._recent)
+
+    def pressure(self, replicas: List) -> dict:
+        """Scaling signal for fleet/elastic.py: how close the fleet is to
+        shedding at the door. ``backlog_frac`` is projected queueing delay
+        as a fraction of the default SLO budget — >1 means new arrivals are
+        already over budget; ``shed_rate`` is the recent-window door rate.
+        """
+        backlog = self.backlog_steps(replicas)
+        return {
+            "shed_rate": self.recent_shed_rate,
+            "backlog_steps": backlog,
+            "backlog_frac": backlog / max(self.slo.max_delay_steps, 1e-9),
+        }
 
     def backlog_steps(self, replicas: List) -> float:
         """Projected steps to drain the fleet's queued work at full rate.
@@ -104,6 +136,7 @@ class AdmissionController:
         if rate <= 0:
             # no replicas / no decode slots: nothing can ever be served, so
             # everything sheds at the door (and no divide-by-zero below)
+            self._recent.append(False)
             return False
         slo = self.slo_for(tenant)
         share_rate = rate * min(max(weight_share, 1e-9), 1.0)
@@ -112,7 +145,9 @@ class AdmissionController:
             + (tenant_backlog_tokens + slo.request_cost(req)) / share_rate
         )
         if projected > slo.max_delay_steps:
+            self._recent.append(False)
             return False
         self.admitted += 1
         self.admitted_by[tenant] = self.admitted_by.get(tenant, 0) + 1
+        self._recent.append(True)
         return True

@@ -30,8 +30,12 @@ def export_all(replicas: List[Replica]) -> List[ReplicaProfile]:
 
 
 def aggregate_counts(profiles: List[ReplicaProfile]) -> np.ndarray:
-    """Fleet hotness histogram over the shared logical page-id space."""
-    n = max(p.counts.size for p in profiles)
+    """Fleet hotness histogram over the shared logical page-id space.
+
+    Robust to an elastic fleet's edge states: no profiles (all hosts
+    retired mid-export) and freshly added hosts with all-zero counts.
+    """
+    n = max((p.counts.size for p in profiles), default=0)
     out = np.zeros(n, np.int64)
     for p in profiles:
         out[: p.counts.size] += p.counts
@@ -57,24 +61,35 @@ def aggregate_tenant_counts(profiles: List[ReplicaProfile]) -> Dict[str, np.ndar
 def stitch_fleet(profiles: List[ReplicaProfile], n_pages: Optional[int] = None) -> TraceWindow:
     """One representative fleet trace from many hosts' windows.
 
-    Windows are ordered by (start_step, rid): hosts tick in lockstep, so
-    this is a fair round-robin interleave of contemporaneous windows —
-    each host's working set stays warm in the fleet-scaled cache just as it
-    does in that host's own cache. ``n_pages`` (the per-host namespace
-    stride) defaults to the widest host's page space.
+    Windows are ordered by (virtual time, rid), where a window that opened
+    at engine step s on a host that joined the fleet at virtual time t0
+    with per-step cost c happened at virtual time t0 + s*c — on a
+    heterogeneous fleet a straggler's step index advances slower than its
+    clock, and an elastically added host's step counter starts at 0 no
+    matter when it joined, so interleaving by raw step index would place
+    both hosts' windows too early. With nominal speeds and a founding
+    (t0=0) replica set this degenerates to the lockstep (start_step, rid)
+    round-robin interleave: contemporaneous windows stay contemporaneous,
+    and each host's working set stays warm in the fleet-scaled cache just
+    as it does in that host's own cache. Known approximation (identical in
+    lockstep and event modes): an engine's step counter freezes while the
+    host is idle, so windows after an idle gap compress toward the gap's
+    start — harmless for replay because idle hosts record no accesses.
+    ``n_pages`` (the per-host namespace stride) defaults to the widest
+    host's page space.
     """
     if n_pages is None:
         n_pages = max((p.n_pages for p in profiles), default=0)
     tagged = []
     for p in profiles:
         for w in p.windows:
-            tagged.append((w.start_step, p.rid, w))
+            tagged.append((p.clock_offset + w.start_step * p.step_cost, p.rid, w))
     tagged.sort(key=lambda t: (t[0], t[1]))
     if not tagged:
         return TraceWindow(0, np.zeros(0, np.int64), np.zeros(0, bool))
     blocks = np.concatenate([w.blocks + rid * n_pages for _, rid, w in tagged])
     writes = np.concatenate([w.is_write for _, _, w in tagged])
-    return TraceWindow(tagged[0][0], blocks, writes)
+    return TraceWindow(tagged[0][2].start_step, blocks, writes)
 
 
 def live_fleet_counters(profiles: List[ReplicaProfile]) -> dict:

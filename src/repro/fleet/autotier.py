@@ -9,6 +9,15 @@ is driven by the representative profile instead of each engine's noisy
 local view. Under a stationary workload the pushed plan converges: the
 Jaccard overlap of successive near-sets approaches 1.
 
+Epochs are keyed on *virtual time*, not fleet-step counts: the event-driven
+fleet has no global tick, and an elastic fleet has no fixed replica set.
+The hook receives the scheduler's clock and re-plans every ``epoch_steps``
+units of virtual time (in lockstep mode with nominal speeds one unit == one
+fleet step, so the legacy cadence is unchanged). Retired replicas keep
+contributing through ``extra_profiles`` — a drained host's history is part
+of the service's behavior even after the host is gone — and a freshly added
+replica with no traffic yet contributes zeros, never NaNs.
+
 Multi-tenant: the plan is still made from the COMBINED histogram — the near
 tier is one physical resource — but each epoch also reports the fraction of
 every tenant's accesses the pushed near set would serve. A skew-heavy
@@ -19,6 +28,7 @@ tenant_interference benchmark measures.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -26,7 +36,7 @@ import numpy as np
 from repro.core import tiering
 from repro.core.hw import HBM_BW, HOST_LINK_BW, TierSpec
 from repro.fleet import aggregator
-from repro.fleet.replica import Replica
+from repro.fleet.replica import Replica, ReplicaProfile
 
 
 def _fleet_specs(near_frac: float) -> tuple:
@@ -45,6 +55,8 @@ class TierEpoch:
     overlap_prev: float  # Jaccard vs previous epoch's near set
     # planned near-served fraction per tenant under the SAME shared near set
     tenant_near_frac: Dict[str, float] = dataclasses.field(default_factory=dict)
+    vtime: float = 0.0  # virtual time this epoch was planned at
+    n_replicas: int = 0  # live replica-set size at plan time (elasticity)
 
 
 class AutoTierer:
@@ -60,17 +72,26 @@ class AutoTierer:
         self.epoch_steps = epoch_steps
         self.specs = specs or _fleet_specs(near_frac)
         self.history: List[TierEpoch] = []
+        # profiles of replicas retired by the elastic layer: their traffic
+        # shaped the service's histogram, so the plan keeps seeing it
+        self.extra_profiles: List[ReplicaProfile] = []
+        self._last_epoch = 0.0
 
     # ------------------------------------------------------------------
-    def __call__(self, fleet_step: int):
-        """FleetRouter.on_step hook."""
-        if fleet_step % self.epoch_steps == 0:
-            self.step(fleet_step)
+    def __call__(self, now: float):
+        """FleetRouter.on_step hook; ``now`` is fleet virtual time."""
+        if now - self._last_epoch >= self.epoch_steps:
+            # advance the boundary grid (even when there is no data yet) so
+            # epochs stay aligned with the legacy fleet-step modulo cadence
+            self._last_epoch += self.epoch_steps * math.floor(
+                (now - self._last_epoch) / self.epoch_steps
+            )
+            self.step(now)
 
-    def step(self, fleet_step: int = 0) -> Optional[TierEpoch]:
-        profiles = aggregator.export_all(self.replicas)
+    def step(self, now: float = 0.0) -> Optional[TierEpoch]:
+        profiles = aggregator.export_all(self.replicas) + list(self.extra_profiles)
         counts = aggregator.aggregate_counts(profiles)
-        if counts.sum() == 0:
+        if counts.size == 0 or counts.sum() == 0:
             return None
         p = tiering.plan(counts, self.specs)
         migrated = sum(r.apply_placement(p.hot_blocks) for r in self.replicas)
@@ -81,15 +102,33 @@ class AutoTierer:
             overlap = len(prev & cur) / max(len(prev | cur), 1)
         tenant_frac = {}
         for t, tc in aggregator.aggregate_tenant_counts(profiles).items():
+            total = float(tc.sum())
+            if tc.size == 0 or total <= 0.0:
+                # a freshly added replica registers its tenant streams
+                # before any traffic lands: report an explicit 0, never
+                # divide into a zero histogram
+                tenant_frac[t] = 0.0
+                continue
             near = tc[p.hot_blocks[p.hot_blocks < tc.size]].sum()
-            tenant_frac[t] = float(near / max(tc.sum(), 1))
+            tenant_frac[t] = float(near / total)
         epoch = TierEpoch(
-            fleet_step, p.hot_blocks, p.hit_fracs[0], migrated, overlap, tenant_frac
+            int(now),
+            p.hot_blocks,
+            p.hit_fracs[0],
+            migrated,
+            overlap,
+            tenant_frac,
+            vtime=float(now),
+            n_replicas=len(self.replicas),
         )
         self.history.append(epoch)
         return epoch
 
     # ------------------------------------------------------------------
+    def warm_near_ids(self) -> Optional[np.ndarray]:
+        """Latest pushed near set — what a scaled-up replica warms from."""
+        return self.history[-1].near_ids if self.history else None
+
     @property
     def converged(self) -> bool:
         """Plan is stable once consecutive near-sets mostly agree."""

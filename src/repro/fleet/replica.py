@@ -35,6 +35,17 @@ class ReplicaProfile:
     # page space and realized near-tier hit rate (interference surface)
     tenant_counts: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     tenant_near_hit: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # virtual time one engine step costs on this host (speed x engine cost):
+    # lets the aggregator order trace windows by when they actually happened
+    # on a heterogeneous fleet, not by per-host step indices. Snapshot at
+    # export — window ordering assumes the cost was constant over the
+    # traced interval (true for per-host speed factors; a step_cost_fn that
+    # varies mid-run would misplace earlier windows)
+    step_cost: float = 1.0
+    # fleet virtual time this host joined (0 for founding replicas): an
+    # elastically added host's engine step counter starts at 0, so its
+    # windows happened at clock_offset + start_step * step_cost
+    clock_offset: float = 0.0
 
     @property
     def n_pages(self) -> int:
@@ -48,13 +59,30 @@ class Replica:
     ``live_cache_blocks`` sizes the per-host live cache simulator used as
     ground truth when validating the stitched fleet trace — it plays the
     role of the paper's hardware hit-ratio counters.
+
+    ``speed`` is this host's step-cost multiplier in virtual time (1.0 =
+    nominal, 4.0 = a 4x straggler). ``clock``/``busy`` are owned by the
+    event-driven fleet run; ``draining`` excludes the host from dispatch
+    while it finishes its backlog (elastic scale-down).
     """
 
-    def __init__(self, rid: int, engine: ServingEngine, live_cache_blocks: int = 128):
+    def __init__(
+        self,
+        rid: int,
+        engine: ServingEngine,
+        live_cache_blocks: int = 128,
+        speed: float = 1.0,
+    ):
         self.rid = rid
         self.engine = engine
         self.live_cache_blocks = live_cache_blocks
         self.live_sim = CacheSim(live_cache_blocks)
+        self.speed = float(speed)
+        self.clock = 0.0  # virtual time of this host's last completion
+        self.created_at = 0.0  # fleet vtime this host joined (elastic)
+        self.busy = False  # a step is in flight on the event scheduler
+        self.draining = False
+        self.steps_done = 0
         engine.access_hooks.append(self._on_access)
 
     def _on_access(self, pages: np.ndarray, is_write: bool):
@@ -66,7 +94,13 @@ class Replica:
         self.engine.submit(req)
 
     def step(self) -> int:
+        self.steps_done += 1
         return self.engine.step()
+
+    @property
+    def step_cost(self) -> float:
+        """Virtual-time cost of this host's next step (straggler = bigger)."""
+        return self.speed * self.engine.step_cost()
 
     @property
     def load(self) -> int:
@@ -79,6 +113,16 @@ class Replica:
     @property
     def idle(self) -> bool:
         return self.engine.load == 0
+
+    # ------------------------------------------------------------------
+    # drain protocol (elastic scale-down): stop receiving, finish backlog
+
+    def start_drain(self):
+        self.draining = True
+
+    @property
+    def drained(self) -> bool:
+        return self.draining and self.idle and not self.busy
 
     def apply_placement(self, near_ids: np.ndarray) -> int:
         self.engine.external_placement = True
@@ -110,7 +154,15 @@ class Replica:
             near_hit_rate=live["near_hit_rate"],
             tenant_counts=tenants,
             tenant_near_hit=tenant_near,
+            step_cost=self.step_cost,
+            clock_offset=self.created_at,
         )
 
     def stats(self) -> dict:
-        return self.engine.stats()
+        return {
+            **self.engine.stats(),
+            "rid": self.rid,
+            "speed": self.speed,
+            "steps_done": self.steps_done,
+            "draining": self.draining,
+        }

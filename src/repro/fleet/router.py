@@ -15,6 +15,14 @@ selection. A burst tenant therefore waits behind its own queue while other
 tenants keep dispatching at their weighted share; its overload is charged
 to its own SLO by the admission controller, never to its neighbors'.
 
+Fleet stepping is event-driven (fleet/scheduler.py): each replica posts a
+step-completion event when its ``step_cost`` of virtual time elapses, and
+the router dispatches from the tenant queues at every completion batch —
+a 4x straggler slows ONE host, not the fleet barrier. The legacy lockstep
+path is kept as a compatibility mode (``run(..., lockstep=True)``); with
+homogeneous speeds and no scaling events the two schedules are identical
+batch for batch, so lockstep-vs-event equivalence is testable bit-exactly.
+
 ``simulated_throughput`` scores a fleet run with a simple cost model in
 token-equivalents: prefill work not recovered by sharing, plus decode work
 inflated by far-tier latency (hw.TPU_TIERED's relative latencies) — the same
@@ -22,6 +30,7 @@ three levers as core/tiering's roofline, in request-serving units.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -29,11 +38,16 @@ import numpy as np
 from repro.core.hw import TPU_TIERED
 from repro.data.requests import Request, RequestGenerator
 from repro.fleet.admission import AdmissionController, SLOModel
-from repro.fleet.replica import Replica
+from repro.fleet.replica import Replica, ReplicaProfile
+from repro.fleet.scheduler import ARRIVAL, VirtualScheduler
 
 FAR_LATENCY_REL = TPU_TIERED[1].latency_rel  # host-DRAM far tier vs HBM
 
 _FALLBACK_SLO = SLOModel()  # cost model for fairness when no admission is set
+
+# default fleet-stepping mode when run() isn't told explicitly; CI flips
+# this to exercise the legacy path against the same test suite
+_LOCKSTEP_ENV = "REPRO_FLEET_LOCKSTEP"
 
 
 class RoundRobinPolicy:
@@ -61,13 +75,16 @@ class PrefixAffinityPolicy:
     Unique prompts (prefix_id == -1) fall back to least-loaded. A sticky
     mapping overloaded past ``spill_factor``x the mean load spills to the
     least-loaded replica instead (a hot template must not melt one host).
+    Homes are keyed by replica ``rid``, not list position — the elastic
+    fleet adds and retires replicas, so positions are not stable. A home
+    whose host has been retired is reassigned to the least-loaded replica.
     """
 
     name = "prefix-affinity"
 
     def __init__(self, spill_factor: float = 3.0):
         self.spill_factor = spill_factor
-        self.home: Dict[int, int] = {}  # prefix_id -> replica index
+        self.home: Dict[int, int] = {}  # prefix_id -> replica rid
         self.affinity_hits = 0
         self.spills = 0
 
@@ -76,9 +93,10 @@ class PrefixAffinityPolicy:
         least = int(np.argmin(loads))
         if req.prefix_id < 0:
             return least
-        i = self.home.get(req.prefix_id)
+        by_rid = {r.rid: idx for idx, r in enumerate(replicas)}
+        i = by_rid.get(self.home.get(req.prefix_id, -1))
         if i is None:
-            self.home[req.prefix_id] = least
+            self.home[req.prefix_id] = replicas[least].rid
             return least
         mean = max(sum(loads) / len(loads), 1.0)
         if loads[i] > self.spill_factor * mean and loads[i] > loads[least]:
@@ -96,12 +114,14 @@ POLICIES = {
 
 
 class FleetRouter:
-    """Per-tenant queueing + dispatch + lockstep stepping of the replica set.
+    """Per-tenant queueing + dispatch + stepping of the replica set.
 
     ``admission`` (optional) gates every offer; ``tenant_weights`` sets the
     weighted-fair dispatch shares (default: equal weights); ``on_step``
-    hooks (e.g. the AutoTierer) run after each fleet step with the global
-    step index.
+    hooks (the AutoTierer, the ElasticFleet) run after every completion
+    batch with the current virtual time. In lockstep mode virtual time
+    advances by the *max* replica step cost per fleet step — the barrier
+    the event-driven scheduler removes.
     """
 
     def __init__(
@@ -124,6 +144,14 @@ class FleetRouter:
         self.shed = 0
         self.routed_by: Dict[str, int] = {}
         self.shed_by: Dict[str, int] = {}
+        # fleet virtual time + queue-wait accounting (virtual-time units)
+        self._now = 0.0
+        self._enqueue_time: Dict[int, float] = {}  # id(req) -> offer time
+        self.wait_samples: Dict[str, List[float]] = {}
+        self.scheduler: Optional[VirtualScheduler] = None
+        self.mode = "idle"
+        self.elastic = None  # ElasticFleet, attached by build_fleet
+        self.autotierer = None  # AutoTierer, attached by build_fleet
 
     # ------------------------------------------------------------------
     # tenant bookkeeping
@@ -146,6 +174,11 @@ class FleetRouter:
             return len(self.tenant_queues.get(tenant, ()))
         return sum(len(q) for q in self.tenant_queues.values())
 
+    @property
+    def active_replicas(self) -> List[Replica]:
+        """Replicas eligible for new work (draining hosts excluded)."""
+        return [r for r in self.replicas if not r.draining]
+
     # ------------------------------------------------------------------
     # offer / dispatch
 
@@ -154,7 +187,7 @@ class FleetRouter:
         tenant = req.tenant
         if self.admission is not None and not self.admission.admit(
             req,
-            self.replicas,
+            self.active_replicas,
             tenant_backlog_tokens=self._tenant_backlog_tokens(tenant),
             weight_share=self._weight_share(tenant),
         ):
@@ -162,6 +195,7 @@ class FleetRouter:
             self.shed_by[tenant] = self.shed_by.get(tenant, 0) + 1
             return False
         self.tenant_queues.setdefault(tenant, []).append(req)
+        self._enqueue_time[id(req)] = self._now
         return True
 
     def _pick_tenant(self) -> Optional[str]:
@@ -175,11 +209,16 @@ class FleetRouter:
         weighted-fair tenant order; returns number routed."""
         n = 0
         while budget is None or n < budget:
+            targets = self.active_replicas
+            if not targets:
+                break
             tenant = self._pick_tenant()
             if tenant is None:
                 break
             req = self.tenant_queues[tenant].pop(0)
-            self.replicas[self.policy.choose(req, self.replicas)].submit(req)
+            targets[self.policy.choose(req, targets)].submit(req)
+            wait = self._now - self._enqueue_time.pop(id(req), self._now)
+            self.wait_samples.setdefault(tenant, []).append(wait)
             self.routed += 1
             self.routed_by[tenant] = self.routed_by.get(tenant, 0) + 1
             # virtual time advances by inverse weight: a weight-2 tenant is
@@ -199,22 +238,33 @@ class FleetRouter:
         return admitted
 
     # ------------------------------------------------------------------
+    # lockstep stepping (compatibility mode)
+
     def step(self) -> int:
+        """One barrier step: every replica advances once, the fleet clock
+        advances by the SLOWEST replica's cost — the straggler tax."""
         decoded = sum(r.step() for r in self.replicas)
         self.fleet_steps += 1
+        self._now += max(r.step_cost for r in self.replicas)
+        for r in self.replicas:
+            r.clock = self._now
         for hook in self.on_step:
-            hook(self.fleet_steps)
+            hook(self._now)
         return decoded
 
     @property
     def free_slots(self) -> int:
         return sum(
-            sum(1 for s in r.engine.slots if not s.active) for r in self.replicas
+            sum(1 for s in r.engine.slots if not s.active)
+            for r in self.active_replicas
         )
 
     @property
     def drained(self) -> bool:
-        return self.queued() == 0 and all(r.idle for r in self.replicas)
+        """No queued work anywhere — valid under out-of-order completion:
+        an in-flight event step holds engine state (busy slots or queue), so
+        it keeps this False until its completion retires the work."""
+        return self.queued() == 0 and all(r.idle and not r.busy for r in self.replicas)
 
     def run(
         self,
@@ -222,18 +272,31 @@ class FleetRouter:
         n_requests: int,
         max_steps: int = 10_000,
         submit_per_step: Optional[int] = None,
+        lockstep: Optional[bool] = None,
     ) -> dict:
         """Serve ``n_requests``: all up-front, or ``submit_per_step`` per
-        fleet step (open-loop arrivals, what admission control acts on).
+        unit of virtual time (open-loop arrivals, what admission acts on).
 
         ``gen`` is a RequestGenerator or any iterator of Requests (e.g. a
-        multi-tenant ``data.requests.interleave`` merge). In the open-loop
-        path, offered requests wait in per-tenant queues and each step
-        dispatches into the fleet's free decode slots in weighted-fair
-        tenant order.
+        multi-tenant ``data.requests.interleave`` merge). Offered requests
+        wait in per-tenant queues; dispatch into free decode slots happens
+        in weighted-fair tenant order at every completion batch (event
+        mode) or once per barrier step (``lockstep=True``). ``max_steps``
+        bounds virtual time (event) / fleet iterations (lockstep) — the
+        same number when speeds are homogeneous.
         """
+        if lockstep is None:
+            lockstep = os.environ.get(_LOCKSTEP_ENV, "0") == "1"
         it = iter(gen)
         pending = [next(it) for _ in range(n_requests)]
+        if lockstep:
+            self._run_lockstep(pending, max_steps, submit_per_step)
+        else:
+            self._run_events(pending, max_steps, submit_per_step)
+        return self.fleet_stats()
+
+    def _run_lockstep(self, pending, max_steps, submit_per_step):
+        self.mode = "lockstep"
         if submit_per_step is None:
             for req in pending:
                 self.submit(req)
@@ -245,13 +308,88 @@ class FleetRouter:
             self.dispatch(max(self.free_slots, 0))
             self.step()
             steps += 1
-        return self.fleet_stats()
+
+    def _run_events(self, pending, max_steps, submit_per_step):
+        """Event-driven serve: completions free capacity, capacity pulls
+        from the tenant queues, idle hosts consume no virtual time."""
+        self.mode = "event"
+        sched = VirtualScheduler()
+        sched.now = self._now
+        self.scheduler = sched
+        horizon = self._now + float(max_steps)
+
+        def quiescent(now: float):
+            self._now = now
+            for hook in list(self.on_step):
+                hook(now)
+            self.dispatch(max(self.free_slots, 0))
+            self._start_steps(sched)
+
+        if submit_per_step is None:
+            for req in pending:
+                self.submit(req)
+            pending.clear()
+            quiescent(sched.now)  # start the first steps (no events yet)
+        else:
+
+            def arrive():
+                self._now = sched.now  # offers stamp enqueue at batch time
+                for _ in range(min(submit_per_step, len(pending))):
+                    self.offer(pending.pop(0))
+                # lockstep offers at iteration starts 0..max_steps-1, so
+                # arrivals stop strictly before the horizon — an extra
+                # batch at t == horizon would break truncated-run equality
+                if pending and sched.now + 1.0 < horizon:
+                    sched.post(sched.now + 1.0, arrive, prio=ARRIVAL)
+
+            sched.post(sched.now, arrive, prio=ARRIVAL)
+
+        sched.run(until=horizon, quiescent=quiescent)
+        # a horizon-truncated run leaves completion events unexecuted in
+        # the discarded scheduler; those steps never happened (no engine
+        # mutation), so clear the in-flight markers or the replicas would
+        # be stuck busy forever and a follow-up run() could never step them
+        for r in self.replicas:
+            r.busy = False
+        self._now = sched.now
+        # event mode has no barrier iterations; report virtual-time ticks
+        # elapsed — the lockstep-equivalent step count at nominal speeds
+        # (per-replica true step counts are in per_replica["steps_done"])
+        self.fleet_steps = int(round(self._now))
+
+    def _start_steps(self, sched: VirtualScheduler):
+        """Begin a step on every replica that has work and no step in
+        flight (draining hosts keep stepping to empty their backlog)."""
+        for r in list(self.replicas):
+            if r.busy or r.load <= 0:
+                continue
+            r.busy = True
+
+            def complete(r=r):
+                self._now = sched.now
+                r.busy = False
+                r.clock = sched.now
+                r.step()
+
+            sched.post(sched.now + r.step_cost, complete)
 
     # ------------------------------------------------------------------
+    def export_profiles(self) -> List[ReplicaProfile]:
+        """Live replicas' profiles + retired hosts folded in by the
+        elastic layer — the full fleet history the aggregator stitches."""
+        profs = [r.export_profile() for r in self.replicas]
+        if self.elastic is not None:
+            profs += list(self.elastic.retired_profiles)
+        return profs
+
     def fleet_stats(self) -> dict:
         per = [r.stats() for r in self.replicas]
+        retired = list(self.elastic.retired_stats) if self.elastic is not None else []
+        # retired hosts' service history stays in the fleet totals — a
+        # scale-down must not make served traffic disappear from the books
+        both = per + retired
         agg = {
-            k: sum(s[k] for s in per)
+            k: sum(s[k] for s in both)
             for k in (
                 "tokens_decoded",
                 "requests_finished",
@@ -260,21 +398,32 @@ class FleetRouter:
             )
         }
         hits = sum(r.engine.placement.stats.near_hits for r in self.replicas)
+        hits += sum(s["placement_near_hits"] for s in retired)
         tot = hits + sum(r.engine.placement.stats.far_hits for r in self.replicas)
+        tot += sum(s["placement_far_hits"] for s in retired)
         agg["near_hit_rate"] = hits / max(tot, 1)
-        agg["shared_mappings"] = sum(s["pagetable"]["shared_mappings"] for s in per)
+        agg["shared_mappings"] = sum(s["pagetable"]["shared_mappings"] for s in both)
         agg["fleet_steps"] = self.fleet_steps
+        agg["virtual_time"] = self._now
+        agg["mode"] = self.mode
         agg["n_replicas"] = len(self.replicas)
         agg["routed"] = self.routed
         agg["shed"] = self.shed
         agg["policy"] = getattr(self.policy, "name", type(self.policy).__name__)
         agg["simulated_throughput"] = simulated_throughput(agg)
-        agg["tenants"] = self.tenant_report(per)
+        agg["tenants"] = self.tenant_report(both)
         agg["per_replica"] = per
+        if self.elastic is not None:
+            agg["retired_replicas"] = retired
+            agg["scale_events"] = [
+                (e.vtime, e.action, e.rid) for e in self.elastic.events
+            ]
         return agg
 
     def tenant_report(self, per_replica_stats: Optional[List[dict]] = None) -> dict:
-        """Fleet-wide per-tenant view: service counts, tier hits, routing."""
+        """Fleet-wide per-tenant view: service counts, tier hits, routing,
+        and queue-wait latency percentiles in virtual time (p50/p99 of the
+        offer->dispatch wait — the fairness surface a burst tenant stresses)."""
         per = per_replica_stats or [r.stats() for r in self.replicas]
         out: Dict[str, dict] = {}
         for s in per:
@@ -295,6 +444,9 @@ class FleetRouter:
             o["shed"] = self.shed_by.get(t, 0)
             o["shed_rate"] = o["shed"] / max(o["routed"] + o["shed"], 1)
             o["queued"] = self.queued(t)
+            waits = self.wait_samples.get(t, [])
+            o["wait_p50"] = float(np.percentile(waits, 50)) if waits else 0.0
+            o["wait_p99"] = float(np.percentile(waits, 99)) if waits else 0.0
         return out
 
 

@@ -1,0 +1,87 @@
+"""Virtual-time event scheduler: the fleet's clock without the barrier.
+
+Lockstep stepping (``FleetRouter.step`` calling every replica once per
+global tick) encodes a hidden assumption the paper's fleet data refutes:
+that all hosts are equally fast. Per-host heterogeneity is first-order at
+hyperscale — one 4x-slow host must cost the fleet one slow *replica*, not a
+4x-slow *barrier*. This module provides the discrete-event core that makes
+stragglers a scenario instead of a bug: each replica runs on its own clock,
+posts a completion event when its step's virtual-time cost elapses, and the
+router dispatches queued work the moment capacity frees.
+
+Determinism is the design constraint: events execute in
+``(time, priority, seq)`` order, where ``seq`` is posting order — there is
+no wall clock, no thread, no hash-order anywhere, so a seeded run replays
+exactly. With homogeneous step costs the event schedule degenerates to the
+lockstep schedule (completions for all busy replicas land on the same
+timestamp, in replica order), which is what lets the router guarantee
+bit-exact equivalence with the legacy lockstep mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, List, Optional
+
+# Priorities order same-timestamp events the way one lockstep iteration
+# orders its phases: step completions retire work and free slots first,
+# then open-loop arrivals are offered to admission. Dispatch is not an
+# event — it runs in the quiescent hook after every batch.
+COMPLETION = 0
+ARRIVAL = 1
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    time: float
+    prio: int
+    seq: int
+    action: Callable[[], None] = dataclasses.field(compare=False)
+
+
+class VirtualScheduler:
+    """Ordered event heap over virtual time.
+
+    ``run`` drains events in (time, prio, seq) order. All events sharing a
+    timestamp form one *batch*; after each batch the ``quiescent`` callback
+    runs once — that is where the fleet router fires its hooks, dispatches
+    from the weighted-fair tenant queues into freed slots, and starts new
+    replica steps (posting their completion events). Actions may post
+    further events, including at the current timestamp.
+    """
+
+    def __init__(self):
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.events_run = 0
+
+    def post(self, time: float, action: Callable[[], None], prio: int = COMPLETION):
+        if time < self.now:
+            raise ValueError(f"event scheduled in the past: {time} < {self.now}")
+        heapq.heappush(self._heap, Event(float(time), prio, next(self._seq), action))
+
+    @property
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def run(
+        self,
+        until: float = float("inf"),
+        quiescent: Optional[Callable[[float], None]] = None,
+        max_events: int = 10_000_000,
+    ) -> float:
+        """Drain events with time <= ``until``; returns final virtual time."""
+        while self._heap and self._heap[0].time <= until:
+            t = self._heap[0].time
+            self.now = t
+            while self._heap and self._heap[0].time == t:
+                ev = heapq.heappop(self._heap)
+                self.events_run += 1
+                if self.events_run > max_events:
+                    raise RuntimeError("VirtualScheduler runaway: max_events exceeded")
+                ev.action()
+            if quiescent is not None:
+                quiescent(t)
+        return self.now

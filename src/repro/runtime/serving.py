@@ -100,6 +100,10 @@ class ServingEngine:
         # when True, a fleet-level planner owns placement (apply_placement);
         # the local TPP epoch is suppressed so the two don't fight
         self.external_placement = False
+        # virtual-time cost of one engine step for the fleet's event
+        # scheduler; replace to model batch- or far-traffic-dependent step
+        # latency. Must stay constant at 1.0 for lockstep-exact replays.
+        self.step_cost_fn: Optional[Callable[["ServingEngine"], float]] = None
         # one jitted decode shared by every engine on the same ModelAPI
         # (a replica fleet compiles once, not once per replica)
         if not hasattr(api, "_jit_decode"):
@@ -269,6 +273,19 @@ class ServingEngine:
     def load(self) -> int:
         """Backlog metric for routing: busy slots + queued requests."""
         return sum(1 for s in self.slots if s.active) + len(self.queue)
+
+    def step_cost(self) -> float:
+        """Virtual-time units one call to ``step`` costs (fleet scheduler).
+
+        The default (1.0) makes engine steps the fleet's time unit; a
+        ``step_cost_fn`` hook can price steps by live state instead.
+        """
+        if self.step_cost_fn is None:
+            return 1.0
+        cost = float(self.step_cost_fn(self))
+        if cost <= 0.0:
+            raise ValueError(f"step_cost_fn must return > 0, got {cost}")
+        return cost
 
     def backlog_tokens(self, prefill_weight: float = 1.0) -> float:
         """Pending work in token-equivalents (admission's backlog estimate).

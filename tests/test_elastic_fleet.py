@@ -1,0 +1,216 @@
+"""Elastic fleet: burst-driven scale-up with warm-tier handoff, drain-before-
+retire with profile folding, and the stitched-trace validation surviving a
+full scale cycle (ISSUE 3 acceptance).
+
+All runs are event-driven (elasticity reacts per completion batch) and
+seeded — scale events land on exact virtual times.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator
+from repro.fleet import (
+    AdmissionController,
+    SLOModel,
+    aggregate_counts,
+    build_fleet,
+    export_all,
+    fleet_vocab,
+    validate_fleet,
+)
+
+
+def _profile(**kw):
+    base = dict(prompt_mean=24, decode_mean=6, prefix_share=0.9, n_prefixes=3)
+    base.update(kw)
+    return dataclasses.replace(get_profile("Web1"), **base)
+
+
+def _elastic_fleet(**kw):
+    base = dict(
+        n_pages=256,
+        trace_window=16,
+        trace_period=32,
+        admission=AdmissionController(SLOModel(max_delay_steps=16.0)),
+        autotier=dict(near_frac=0.30, epoch_steps=4),
+        elastic=dict(
+            min_replicas=2, max_replicas=5, cooldown=3.0,
+            up_shed_rate=0.05, up_backlog_frac=0.6, down_backlog_frac=0.15,
+        ),
+        seed=0,
+    )
+    base.update(kw)
+    return build_fleet(2, policy="least-loaded", **base)
+
+
+def _burst_run(fleet, n_requests=60, submit_per_step=6, seed=0):
+    gen = RequestGenerator(_profile(), vocab_size=fleet_vocab(), seed=seed)
+    return fleet.run(
+        gen, n_requests=n_requests, max_steps=800, submit_per_step=submit_per_step
+    )
+
+
+# ---------------------------------------------------------------------------
+# scale-up: warm-tier handoff
+
+
+def test_scale_up_warms_near_tier_from_fleet_plan():
+    """Acceptance: a scaled-up replica's initial near set IS the
+    AutoTierer's latest pushed plan (truncated to the host's capacity),
+    and fleet planning owns its placement from birth."""
+    fleet = _elastic_fleet()
+    _burst_run(fleet, n_requests=16, submit_per_step=2)
+    at = fleet.autotierer
+    assert at.history  # plan exists before the handoff
+    plan = at.warm_near_ids()
+    r = fleet.elastic.scale_up(fleet._now, reason="test")
+    expected = np.asarray(plan, np.int64).reshape(-1)
+    expected = expected[(expected >= 0) & (expected < r.engine.ecfg.n_pages)]
+    expected = np.sort(expected[: r.engine.placement.near_capacity])
+    np.testing.assert_array_equal(
+        np.flatnonzero(r.engine.placement.tier == 0), expected
+    )
+    assert r.engine.external_placement
+    assert r in fleet.replicas and r in at.replicas  # one shared list
+
+
+def test_scale_up_without_plan_cold_starts():
+    fleet = _elastic_fleet(autotier=None, elastic=dict(min_replicas=1, max_replicas=3))
+    r = fleet.elastic.scale_up(0.0, reason="test")
+    assert not r.engine.external_placement  # local TPP loop stays in charge
+    assert r.rid == 2  # rids continue past the initial set
+
+
+# ---------------------------------------------------------------------------
+# scale-down: drain, retire, fold the profile
+
+
+# manual-drain tests: a huge cooldown disables automatic scale decisions
+# (retire-on-drained still runs every batch), min_replicas=1 allows the
+# manual scale_down of one of the two initial hosts
+_MANUAL = dict(min_replicas=1, max_replicas=5, cooldown=1e9)
+
+
+def test_drained_replica_profile_folds_into_fleet_histogram():
+    fleet = _elastic_fleet(elastic=dict(_MANUAL))
+    _burst_run(fleet, n_requests=16, submit_per_step=2)
+    victim = fleet.replicas[-1]
+    before = victim.engine.profiler.counts("kv").copy()
+    assert before.sum() > 0
+    fleet.elastic.scale_down(fleet._now, reason="test")
+    assert victim.draining
+    # drain to empty: serve nothing new, let the victim finish its backlog
+    _burst_run(fleet, n_requests=4, submit_per_step=1, seed=9)
+    assert victim not in fleet.replicas  # retired
+    retired = [p for p in fleet.elastic.retired_profiles if p.rid == victim.rid]
+    assert len(retired) == 1
+    # its counts only grew while draining, and the fleet aggregate keeps them
+    assert (retired[0].counts[: before.size] >= before).all()
+    combined = aggregate_counts(fleet.export_profiles())
+    live_only = aggregate_counts(export_all(fleet.replicas))
+    n = combined.size
+    assert combined.sum() == live_only.sum() + sum(
+        int(p.counts.sum()) for p in fleet.elastic.retired_profiles
+    )
+    assert (combined[: retired[0].counts.size] >= retired[0].counts[:n]).all()
+    # the autotierer keeps planning on the retired host's history too
+    assert retired[0] in fleet.autotierer.extra_profiles
+    # ...and the fleet service books keep the retired host's work
+    stats = fleet.fleet_stats()
+    assert stats["requests_finished"] == stats["routed"]
+
+
+def test_drained_replica_never_receives_new_work():
+    fleet = _elastic_fleet(elastic=dict(_MANUAL))
+    _burst_run(fleet, n_requests=8, submit_per_step=2)
+    victim = fleet.replicas[0]
+    routed_before = victim.engine.prefill_tokens
+    victim.start_drain()
+    _burst_run(fleet, n_requests=8, submit_per_step=2, seed=5)
+    assert victim.engine.prefill_tokens == routed_before
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the full cycle
+
+
+def test_burst_triggers_scale_cycle_and_trace_stays_valid():
+    """Acceptance: an arrival burst scales the fleet up; the post-burst
+    quiet period drains + retires; the stitched fleet trace (including
+    retired hosts) stays within <=5% of live counters across the cycle."""
+    fleet = _elastic_fleet()
+    stats = _burst_run(fleet)
+    actions = [e.action for e in fleet.elastic.events]
+    assert "up" in actions, fleet.elastic.events
+    assert "retire" in actions, fleet.elastic.events
+    assert stats["shed"] > 0  # the burst was a real overload
+    assert stats["requests_finished"] == stats["routed"]  # drains served all
+    # back to the floor after the burst
+    assert len(fleet.replicas) == fleet.elastic.min_replicas
+    val = validate_fleet(fleet.export_profiles())
+    assert val["trace_len"] > 0
+    assert val["hit_ratio_error"] <= 0.05, val
+    assert abs(val["rw_ratio_error_pct"]) <= 5.0, val
+
+
+def test_scale_cycle_is_deterministic():
+    events = []
+    for _ in range(2):
+        fleet = _elastic_fleet()
+        _burst_run(fleet)
+        events.append([(e.vtime, e.action, e.rid) for e in fleet.elastic.events])
+    assert events[0] == events[1] and events[0]
+
+
+def test_scale_down_respects_min_replicas():
+    fleet = _elastic_fleet()
+    assert fleet.elastic.scale_down(0.0) is None  # already at the floor
+    assert all(not r.draining for r in fleet.replicas)
+
+
+def test_stitch_orders_late_joiner_windows_by_join_time():
+    """Regression: an elastically added host's engine step counter starts
+    at 0 — its windows must stitch at join-time + step*cost, not at the
+    trace's beginning."""
+    from repro.core.memtrace import TraceWindow
+    from repro.fleet import ReplicaProfile, stitch_fleet
+
+    def prof(rid, blocks, clock_offset):
+        w = TraceWindow(0, np.full(4, blocks, np.int64), np.zeros(4, bool))
+        return ReplicaProfile(
+            rid=rid, counts=np.bincount(w.blocks, minlength=8), windows=[w],
+            reads=4, writes=0, live_hit_ratio=0.5, live_accesses=4,
+            live_capacity=4, near_hit_rate=1.0, clock_offset=clock_offset,
+        )
+
+    founding, joiner = prof(0, 1, 0.0), prof(1, 2, 100.0)
+    trace = stitch_fleet([joiner, founding], n_pages=8)
+    # founding host's window (vtime 0) comes first despite list order and
+    # both windows sharing start_step 0
+    assert trace.blocks[0] == 1 and trace.blocks[-1] == 2 + 8  # namespaced
+
+
+def test_scaled_up_replica_records_join_time():
+    fleet = _elastic_fleet()
+    _burst_run(fleet, n_requests=12, submit_per_step=2)
+    r = fleet.elastic.scale_up(fleet._now, reason="test")
+    assert r.created_at == fleet._now > 0
+    assert r.export_profile().clock_offset == r.created_at
+
+
+def test_admission_pressure_export():
+    adm = AdmissionController(SLOModel(max_delay_steps=8.0), pressure_window=4)
+    fleet = _elastic_fleet(admission=adm, elastic=None)
+    p = adm.pressure(fleet.replicas)
+    assert p["shed_rate"] == 0.0 and p["backlog_steps"] == 0.0
+    gen = RequestGenerator(_profile(), vocab_size=fleet_vocab(), seed=0)
+    for _ in range(12):
+        fleet.offer(next(gen))
+    p = adm.pressure(fleet.replicas)
+    assert 0.0 <= p["shed_rate"] <= 1.0
+    assert p["shed_rate"] == pytest.approx(adm.recent_shed_rate)
+    # window is sliding: only the last 4 decisions count
+    assert len(adm._recent) == 4

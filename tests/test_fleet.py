@@ -1,6 +1,12 @@
 """Fleet subsystem: router policies, fleet-wide MemProf aggregation
 (Table 6's <=5% stitched-trace validation, at fleet scale), online
-re-tiering convergence, and admission control."""
+re-tiering convergence, admission control, and the event-driven scheduler's
+lockstep-equivalence + straggler-tolerance guarantees.
+
+The whole module runs under whichever stepping mode REPRO_FLEET_LOCKSTEP
+selects (CI runs both), except the tests that pin ``lockstep=`` explicitly
+to compare the two schedules.
+"""
 import dataclasses
 
 import numpy as np
@@ -29,13 +35,19 @@ def web_profile(**kw):
     return dataclasses.replace(get_profile("Web1"), **base)
 
 
-def run_fleet(policy, n_replicas=4, n_requests=16, profile=None, seed=0, **fleet_kw):
+def run_fleet(
+    policy, n_replicas=4, n_requests=16, profile=None, seed=0, lockstep=None,
+    submit_per_step=2, **fleet_kw,
+):
     kw = dict(trace_window=16, trace_period=32)
     kw.update(fleet_kw)
     fleet = build_fleet(n_replicas, policy=policy, seed=seed, **kw)
     prof = profile or web_profile()
     gen = RequestGenerator(prof, vocab_size=fleet_vocab(), seed=seed)
-    stats = fleet.run(gen, n_requests=n_requests, max_steps=800, submit_per_step=2)
+    stats = fleet.run(
+        gen, n_requests=n_requests, max_steps=800,
+        submit_per_step=submit_per_step, lockstep=lockstep,
+    )
     return fleet, stats
 
 
@@ -127,6 +139,127 @@ def test_fleet_trace_validates_within_5pct(policy):
 
 
 # ---------------------------------------------------------------------------
+# event-driven scheduler: lockstep equivalence + straggler tolerance
+
+
+EQUIV_FIELDS = (
+    "tokens_decoded",
+    "requests_finished",
+    "prefill_tokens",
+    "prefill_tokens_saved",
+    "routed",
+    "shed",
+    "near_hit_rate",
+    "shared_mappings",
+    "fleet_steps",
+    "virtual_time",
+)
+
+
+def _equiv_run(lockstep):
+    """Overloaded enough that admission sheds — shed equality is the
+    subtlest part of the equivalence claim (same decisions at the door)."""
+    return run_fleet(
+        "prefix-affinity",
+        n_requests=40,
+        submit_per_step=6,
+        lockstep=lockstep,
+        admission=AdmissionController(SLOModel(max_delay_steps=6.0)),
+        autotier=dict(near_frac=0.30, epoch_steps=8),
+    )
+
+
+def test_event_driven_reproduces_lockstep_exactly():
+    """Acceptance: homogeneous speeds + no scaling => identical fleet_stats.
+
+    The event schedule must degenerate to the lockstep schedule batch for
+    batch: same decode counts, same finishes, same sheds, same epochs —
+    not approximately, exactly.
+    """
+    fl, ls = _equiv_run(lockstep=True)
+    fe, ev = _equiv_run(lockstep=False)
+    assert ls["mode"] == "lockstep" and ev["mode"] == "event"
+    for k in EQUIV_FIELDS:
+        assert ls[k] == ev[k], (k, ls[k], ev[k])
+    assert ls["shed"] > 0  # the interesting regime was actually exercised
+    # per-tenant routing books and queue-wait percentiles agree too
+    for t, lt in ls["tenants"].items():
+        for k in ("routed", "shed", "wait_p50", "wait_p99"):
+            assert lt[k] == ev["tenants"][t][k], (t, k)
+    # autotier epochs land on the same virtual times with identical plans
+    hl, he = fl.autotierer.history, fe.autotierer.history
+    assert [e.vtime for e in hl] == [e.vtime for e in he]
+    assert all(np.array_equal(a.near_ids, b.near_ids) for a, b in zip(hl, he))
+
+
+def test_straggler_event_driven_beats_lockstep():
+    """Acceptance: a 4x straggler gates the lockstep barrier (every fleet
+    step costs max(step_cost)) but only its own host under the event
+    scheduler — decode throughput per virtual time must show it."""
+    tput = {}
+    for lockstep in (True, False):
+        fleet = build_fleet(
+            4, policy="least-loaded", speeds=(1, 1, 1, 4),
+            trace_window=16, trace_period=32, seed=0,
+        )
+        gen = RequestGenerator(
+            web_profile(prefix_share=0.0), vocab_size=fleet_vocab(), seed=1
+        )
+        # same horizon AND same offered load per unit virtual time (a
+        # lockstep iteration spans 4 units, so it gets 4 ticks' arrivals)
+        stats = fleet.run(
+            gen, n_requests=60, max_steps=10 if lockstep else 40,
+            submit_per_step=8 if lockstep else 2, lockstep=lockstep,
+        )
+        assert stats["virtual_time"] == pytest.approx(40.0)
+        tput[lockstep] = stats["tokens_decoded"] / stats["virtual_time"]
+    assert tput[False] > 1.5 * tput[True], tput
+
+
+def test_truncated_run_offer_books_match_lockstep():
+    """Horizon truncation must not desync the modes' arrival schedules:
+    lockstep offers at iteration starts 0..max_steps-1, so event mode must
+    not sneak in an extra arrival batch at t == horizon."""
+    books = {}
+    for mode in (True, False):
+        fleet = build_fleet(2, policy="round-robin", trace_window=16, trace_period=32)
+        gen = RequestGenerator(web_profile(), vocab_size=fleet_vocab(), seed=3)
+        stats = fleet.run(
+            gen, n_requests=40, max_steps=5, submit_per_step=2, lockstep=mode
+        )
+        books[mode] = (stats["routed"], stats["shed"], fleet.queued())
+    assert books[True] == books[False]
+    assert books[True][0] + books[True][2] == 10  # 5 ticks x 2 offered
+
+
+def test_truncated_event_run_resumes_cleanly():
+    """Regression: a horizon-truncated event run discards un-executed
+    completion events; the in-flight markers must be cleared with them or
+    the replicas stay busy forever and a follow-up run serves nothing."""
+    fleet = build_fleet(2, policy="round-robin", trace_window=16, trace_period=32)
+    gen = RequestGenerator(web_profile(), vocab_size=fleet_vocab(), seed=2)
+    fleet.run(gen, n_requests=12, max_steps=3, submit_per_step=4, lockstep=False)
+    assert all(not r.busy for r in fleet.replicas)
+    assert not fleet.drained  # work genuinely survived the truncation
+    stats = fleet.run(gen, n_requests=2, max_steps=400, submit_per_step=2, lockstep=False)
+    assert fleet.drained
+    assert stats["requests_finished"] == stats["routed"]
+
+
+def test_replica_step_cost_hook():
+    fleet, _ = run_fleet("round-robin", n_requests=4)
+    r = fleet.replicas[0]
+    assert r.step_cost == 1.0
+    r.speed = 4.0
+    assert r.step_cost == 4.0
+    r.engine.step_cost_fn = lambda eng: 0.5
+    assert r.step_cost == 2.0
+    r.engine.step_cost_fn = lambda eng: 0.0
+    with pytest.raises(ValueError):
+        r.engine.step_cost()
+
+
+# ---------------------------------------------------------------------------
 # autotier (online fleet re-tiering)
 
 
@@ -148,6 +281,22 @@ def test_autotier_converges_on_stationary_workload():
     # pushed near set respects each replica's near capacity
     for r in fleet.replicas:
         assert (r.engine.placement.tier == 0).sum() <= r.engine.placement.near_capacity
+
+
+def test_autotier_zero_count_tenant_reports_zero_not_nan():
+    """Regression: a freshly added replica can register a tenant stream
+    before any traffic lands (elastic warm-up). The epoch must report an
+    explicit 0.0 for that tenant, not divide into a zero histogram."""
+    fleet, _ = run_fleet(
+        "round-robin", n_requests=8, autotier=dict(near_frac=0.30, epoch_steps=8)
+    )
+    fleet.replicas[0].engine.profiler.record("kv.idle", np.zeros(0, np.int64))
+    epoch = fleet.autotierer.step(fleet.fleet_steps)
+    assert epoch is not None
+    assert epoch.tenant_near_frac["idle"] == 0.0
+    assert all(np.isfinite(v) for v in epoch.tenant_near_frac.values())
+    # the zero-traffic tenant never perturbs the combined plan
+    assert epoch.near_ids.size > 0
 
 
 def test_apply_placement_counts_migrations():
