@@ -11,17 +11,18 @@ from repro.data.requests import RequestGenerator
 from repro.models.api import get_model
 from repro.runtime.serving import EngineConfig, ServingEngine
 
-_PARAMS_CACHE = {}
+_MODEL_CACHE = {}  # arch -> (cfg, api, params): one jitted decode per arch
 
 
 def engine_for(arch="smollm-360m", seed=0, **ekw):
-    cfg = get_config(arch).reduced()
-    api = get_model(cfg)
-    if arch not in _PARAMS_CACHE:
-        _PARAMS_CACHE[arch] = api.init(jax.random.PRNGKey(0))
+    if arch not in _MODEL_CACHE:
+        cfg = get_config(arch).reduced()
+        api = get_model(cfg)
+        _MODEL_CACHE[arch] = (cfg, api, api.init(jax.random.PRNGKey(0)))
+    cfg, api, params = _MODEL_CACHE[arch]
     kw = dict(max_batch=4, max_len=64, n_pages=512)
     kw.update(ekw)
-    return cfg, ServingEngine(api, _PARAMS_CACHE[arch], EngineConfig(**kw), seed=seed)
+    return cfg, ServingEngine(api, params, EngineConfig(**kw), seed=seed)
 
 
 def run_workload(name, n_requests=10, seed=0, arch="smollm-360m", prompt=24, decode=8, **ekw):

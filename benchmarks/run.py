@@ -24,6 +24,7 @@ MODULES = [
     "fleet_bench",
     "straggler_bench",
     "tenant_interference",
+    "tiered_decode_bench",
     "kernels_bench",
 ]
 

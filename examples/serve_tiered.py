@@ -4,6 +4,22 @@ Two engines serve the same Web1-like traffic (high shared-prefix rate):
 one with the paper's techniques ON, one with sharing off and a cold-only
 placement — the deltas are the paper's Table 5 / Fig. 17 story live.
 
+Device-executed tiering: the ON engine runs with
+``EngineConfig.device_tiering=True`` (equivalently env
+``REPRO_DEVICE_TIERING=1`` flips the default for every engine), so the
+near/far split is EXECUTED on device rather than only accounted host-side:
+the decode step's KV page stream runs through the fused
+``kernels/tiered_gather`` Pallas pass over a device-resident store (near
+rows f32, far rows int8 + per-row scales, dequant fused into the gather),
+the near/far hit counters come back from the kernel, and every placement
+push moves real rows between the tiers (promote = dequantize far->near,
+demote = quantize near->far). The model's decode math itself stays the
+exact per-family path — the device store executes the tier plane beside
+it, pinned to the flat mirror by the differential harness. With
+``tiered_identity_scales=True`` the device path is bit-identical to the
+host-accounted engine — same tokens, same counters — which is exactly what
+tests/test_tiered_decode.py enforces.
+
 PYTHONPATH=src python examples/serve_tiered.py
 """
 import dataclasses
@@ -17,13 +33,16 @@ from repro.models.api import get_model
 from repro.runtime.serving import EngineConfig, ServingEngine
 
 
-def run(share: float, near_frac: float, label: str, n_requests=12):
+def run(share: float, near_frac: float, label: str, n_requests=12, device=False):
     cfg = get_config("smollm-360m").reduced()
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     eng = ServingEngine(
         api, params,
-        EngineConfig(max_batch=4, max_len=96, n_pages=1024, near_frac=near_frac),
+        EngineConfig(
+            max_batch=4, max_len=96, n_pages=1024, near_frac=near_frac,
+            device_tiering=device, tiered_identity_scales=device,
+        ),
     )
     prof = dataclasses.replace(
         get_profile("Web1"), prompt_mean=48, decode_mean=10,
@@ -38,11 +57,16 @@ def run(share: float, near_frac: float, label: str, n_requests=12):
     print(f"  page dedup {pt['dedup_ratio']:.2f}x  (shared mappings {pt['shared_mappings']}, COW {pt['cow_copies']})")
     print(f"  prefetch acc {stats['prefetch_accuracy']:.2f} cov {stats['prefetch_coverage']:.2f} "
           f"bw overhead {stats['prefetch_bw_overhead']:.2f}")
+    dev = stats["device_tiering"]
+    if dev is not None:
+        print(f"  device tiering: {dev['near_hits']} near / {dev['far_hits']} far hits counted "
+              f"in-kernel, {dev['moved_rows']} rows migrated ({dev['moved_bytes']} B)")
     return stats
 
 
 def main():
-    on = run(share=0.95, near_frac=0.30, label="technique ON  (sharing + 30% near tier)")
+    on = run(share=0.95, near_frac=0.30,
+             label="technique ON  (sharing + 30% near tier, device-executed)", device=True)
     off = run(share=0.0, near_frac=0.05, label="technique OFF (no sharing, 5% near tier)")
     saved = on["prefill_tokens_saved"]
     print(f"\nprefix sharing recovered {saved} prefill tokens; "

@@ -57,6 +57,9 @@ class TierEpoch:
     tenant_near_frac: Dict[str, float] = dataclasses.field(default_factory=dict)
     vtime: float = 0.0  # virtual time this epoch was planned at
     n_replicas: int = 0  # live replica-set size at plan time (elasticity)
+    # bytes the push actually moved through the hosts' device tier stores
+    # (promote dequants + demote quants); 0 when hosts run host-accounted
+    device_moved_bytes: int = 0
 
 
 class AutoTierer:
@@ -94,7 +97,9 @@ class AutoTierer:
         if counts.size == 0 or counts.sum() == 0:
             return None
         p = tiering.plan(counts, self.specs)
+        moved_before = sum(r.device_moved_bytes for r in self.replicas)
         migrated = sum(r.apply_placement(p.hot_blocks) for r in self.replicas)
+        device_moved = sum(r.device_moved_bytes for r in self.replicas) - moved_before
         overlap = 0.0
         if self.history:
             prev = set(self.history[-1].near_ids.tolist())
@@ -120,6 +125,7 @@ class AutoTierer:
             tenant_frac,
             vtime=float(now),
             n_replicas=len(self.replicas),
+            device_moved_bytes=device_moved,
         )
         self.history.append(epoch)
         return epoch

@@ -46,6 +46,11 @@ class ReplicaProfile:
     # elastically added host's engine step counter starts at 0, so its
     # windows happened at clock_offset + start_step * step_cost
     clock_offset: float = 0.0
+    # device-executed tiering (runtime/tiered_kv): when the host runs the
+    # fused tiered-gather decode path this carries the store's counters
+    # (near/far hits counted on device, bytes actually moved by placement
+    # pushes); None for hosts on the host-accounted path
+    device_tiering: Optional[dict] = None
 
     @property
     def n_pages(self) -> int:
@@ -156,7 +161,13 @@ class Replica:
             tenant_near_hit=tenant_near,
             step_cost=self.step_cost,
             clock_offset=self.created_at,
+            device_tiering=None if eng.tiered is None else eng.tiered.stats(),
         )
+
+    @property
+    def device_moved_bytes(self) -> int:
+        """Bytes the device tier store has actually migrated on this host."""
+        return 0 if self.engine.tiered is None else self.engine.tiered.moved_bytes
 
     def stats(self) -> dict:
         return {

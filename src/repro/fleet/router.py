@@ -30,13 +30,13 @@ three levers as core/tiering's roofline, in request-serving units.
 """
 from __future__ import annotations
 
-import os
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.hw import TPU_TIERED
 from repro.data.requests import Request, RequestGenerator
+from repro.env import env_flag
 from repro.fleet.admission import AdmissionController, SLOModel
 from repro.fleet.replica import Replica, ReplicaProfile
 from repro.fleet.scheduler import ARRIVAL, VirtualScheduler
@@ -286,7 +286,7 @@ class FleetRouter:
         same number when speeds are homogeneous.
         """
         if lockstep is None:
-            lockstep = os.environ.get(_LOCKSTEP_ENV, "0") == "1"
+            lockstep = env_flag(_LOCKSTEP_ENV, default=False)
         it = iter(gen)
         pending = [next(it) for _ in range(n_requests)]
         if lockstep:

@@ -6,7 +6,16 @@ ref.py (pure-jnp oracle used by tests and by the models' default path).
 
 flash_attention — blocked online-softmax attention (prefill/train)
 paged_attention — decode attention over paged KV via scalar-prefetch page table
-tiered_gather   — hot-tier row gather (+ int8 far-tier dequant fusion)
+tiered_gather   — near/far tiered row gather: fused tier select + int8
+                  far-tier dequant + on-device hit counting; the serving
+                  engine's device-executed tiering path
+                  (runtime/tiered_kv + EngineConfig.device_tiering)
 rwkv6_scan      — chunked WKV6 with per-channel data-dependent decay
 mamba2_scan     — chunked SSD state-space scan
+
+Interpret-mode policy is shared by all five packages (_interpret.py):
+every public op and kernel entry point takes ``interpret=None``, which
+resolves to the ``REPRO_KERNEL_INTERPRET`` env var when set, else to
+compiled-on-TPU / interpreted-elsewhere auto-detection.
 """
+from repro.kernels._interpret import default_interpret, resolve_interpret  # noqa: F401

@@ -1,0 +1,39 @@
+"""One interpret-mode default shared by all five kernel packages.
+
+Historically each ops.py picked its own default (``interpret=True``, CPU
+container assumption) while the kernel.py entry points defaulted to
+``interpret=False`` — calling a kernel directly on CPU crashed, and running
+ops on a real TPU silently interpreted. The single source of truth is now:
+
+  * ``REPRO_KERNEL_INTERPRET`` env var, when set: "1"/"true" forces
+    interpret mode (CI's CPU kernel job), "0"/"false" forces compiled
+    Mosaic lowering;
+  * otherwise auto-detect: compiled on TPU backends, interpreted elsewhere.
+
+Public ops take ``interpret: bool | None = None`` and resolve ``None``
+through :func:`resolve_interpret` *outside* their ``jax.jit`` wrapper, so an
+env flip mid-process is honored (the jit cache is keyed on the resolved
+bool, never on ``None``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.env import env_flag
+
+ENV_VAR = "REPRO_KERNEL_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for this process: env override, else backend."""
+    env = env_flag(ENV_VAR)
+    if env is not None:
+        return env
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a caller's ``interpret`` argument (None -> shared default)."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -81,7 +83,7 @@ def flash_attention_kernel(
     block_k: int = 512,
     lk_valid: int | None = None,
     q_offset: int | None = None,
-    interpret: bool = False,
+    interpret=None,
 ) -> jax.Array:
     """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D). Dims must divide the blocks.
 
@@ -118,5 +120,5 @@ def flash_attention_kernel(
             pltpu.VMEM((block_q, LANES), jnp.float32),  # l
             pltpu.VMEM((block_q, d), jnp.float32),  # acc
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

@@ -7,10 +7,12 @@ valid-length mask (padding K rows land beyond lk_valid and score -inf).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._interpret import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 
 LANE = 128
@@ -25,16 +27,25 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths), pad
 
 
-@functools.partial(
-    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
-)
 def flash_attention(
-    q, k, v, *, causal: bool = True, block_q: int = 512, block_k: int = 512, interpret: bool = True
+    q, k, v, *, causal: bool = True, block_q: int = 512, block_k: int = 512,
+    interpret: Optional[bool] = None,
 ):
     """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D).
 
-    interpret=True by default: this container is CPU-only; on TPU pass False.
+    ``interpret=None`` resolves via kernels._interpret (env override, else
+    compiled on TPU / interpreted elsewhere).
     """
+    return _flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def _flash_attention(q, k, v, *, causal, block_q, block_k, interpret):
     b, hq, lq, d = q.shape
     lk = k.shape[2]
     bq = min(block_q, max(lq, 8))

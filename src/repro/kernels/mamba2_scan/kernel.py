@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret
+
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, s0_ref, y_ref, sout_ref, s_ref):
     t_idx = pl.program_id(2)
@@ -71,7 +73,7 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, s0_ref, y_ref, sout_ref, 
         sout_ref[0, 0] = s_new.astype(sout_ref.dtype)
 
 
-def ssd_chunked_kernel(x, dt, a, b, c, d, s0, *, chunk: int = 64, interpret: bool = False):
+def ssd_chunked_kernel(x, dt, a, b, c, d, s0, *, chunk: int = 64, interpret=None):
     """x: (B,H,T,P); dt: (B,H,T); a,d: (H,); b,c: (B,T,N); s0: (B,H,P,N).
 
     Returns (y (B,H,T,P) f32, s_out (B,H,P,N) f32). T % chunk == 0.
@@ -102,5 +104,5 @@ def ssd_chunked_kernel(x, dt, a, b, c, d, s0, *, chunk: int = 64, interpret: boo
             jax.ShapeDtypeStruct((bb, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, dt, b, c, a, d, s0)

@@ -2,20 +2,28 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._interpret import resolve_interpret
 from repro.kernels.mamba2_scan.kernel import ssd_chunked_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_chunked(x, dt, A, B, C, D, state=None, *, chunk: int = 64, interpret: bool = True):
+def ssd_chunked(x, dt, A, B, C, D, state=None, *, chunk: int = 64, interpret: Optional[bool] = None):
     """Model-layout SSD: x (B,T,H,P); dt (B,T,H); A,D (H,); B,C (B,T,N).
 
     Returns (y (B,T,H,P) f32, final_state (B,H,P,N) f32). Pads T to a chunk
     multiple with identity steps (dt=0: no decay, no input, no output used).
     """
+    return _ssd_chunked(
+        x, dt, A, B, C, D, state, chunk=chunk, interpret=resolve_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_chunked(x, dt, A, B, C, D, state, *, chunk, interpret):
     b, t, h, p = x.shape
     n = B.shape[-1]
     if state is None:

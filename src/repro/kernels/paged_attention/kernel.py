@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -75,7 +77,7 @@ def paged_attention_kernel(
     page_table: jax.Array,
     lengths: jax.Array,
     *,
-    interpret: bool = False,
+    interpret=None,
 ) -> jax.Array:
     """q: (B, Hkv, G, d); pages: (Hkv, P, ps, d); page_table: (B, pp) int32;
     lengths: (B,) int32. Returns (B, Hkv, G, d)."""
@@ -110,5 +112,5 @@ def paged_attention_kernel(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(flat_pt, lengths, q, k_pages, v_pages)

@@ -2,20 +2,28 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._interpret import resolve_interpret
 from repro.kernels.paged_attention.kernel import paged_attention_kernel
 
 LANE = 128
 MIN_G = 8  # sublane floor for the q block
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: bool = True):
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: Optional[bool] = None):
     """q: (B, Hq, d); k/v_pages: (Hkv, P, ps, d); page_table: (B, pp);
     lengths: (B,). Returns (B, Hq, d)."""
+    return _paged_attention(
+        q, k_pages, v_pages, page_table, lengths, interpret=resolve_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret):
     b, hq, d = q.shape
     hkv = k_pages.shape[0]
     g = hq // hkv

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret
+
 
 def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sout_ref, s_ref):
     t_idx = pl.program_id(2)
@@ -72,7 +74,7 @@ def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sout_ref, s_ref):
         sout_ref[0, 0] = s_new.astype(sout_ref.dtype)
 
 
-def wkv6_chunked_kernel(r, k, v, lw, u, s0, *, chunk: int = 64, interpret: bool = False):
+def wkv6_chunked_kernel(r, k, v, lw, u, s0, *, chunk: int = 64, interpret=None):
     """r/k/v/lw: (B, H, T, hd); u: (H, hd); s0: (B, H, hd, hd).
 
     Returns (y (B,H,T,hd) f32, s_out (B,H,hd,hd) f32). T % chunk == 0.
@@ -102,5 +104,5 @@ def wkv6_chunked_kernel(r, k, v, lw, u, s0, *, chunk: int = 64, interpret: bool 
             jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(r, k, v, lw, u, s0)

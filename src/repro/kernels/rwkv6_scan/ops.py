@@ -2,20 +2,28 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._interpret import resolve_interpret
 from repro.kernels.rwkv6_scan.kernel import wkv6_chunked_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def wkv6_chunked(r, k, v, lw, u, state=None, *, chunk: int = 64, interpret: bool = True):
+def wkv6_chunked(r, k, v, lw, u, state=None, *, chunk: int = 64, interpret: Optional[bool] = None):
     """Model-layout WKV6: r/k/v/lw (B, T, H, hd); u (H, hd); state (B,H,hd,hd).
 
     Returns (y (B,T,H,hd) f32, final_state). Pads T to a chunk multiple with
     identity steps (w=1, k=v=r=0: no state change, no output contribution).
     """
+    return _wkv6_chunked(
+        r, k, v, lw, u, state, chunk=chunk, interpret=resolve_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _wkv6_chunked(r, k, v, lw, u, state, *, chunk, interpret):
     b, t, h, hd = r.shape
     if state is None:
         state = jnp.zeros((b, h, hd, hd), jnp.float32)

@@ -1,2 +1,10 @@
-from repro.kernels.tiered_gather.ops import gather_rows, tiered_lookup  # noqa: F401
-from repro.kernels.tiered_gather.ref import gather_rows_ref, tiered_lookup_ref  # noqa: F401
+from repro.kernels.tiered_gather.ops import (  # noqa: F401
+    gather_rows,
+    tiered_lookup,
+    tiered_lookup_counted,
+)
+from repro.kernels.tiered_gather.ref import (  # noqa: F401
+    gather_rows_ref,
+    tiered_lookup_counted_ref,
+    tiered_lookup_ref,
+)

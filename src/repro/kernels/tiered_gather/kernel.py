@@ -1,12 +1,22 @@
-"""Tiered row-gather Pallas TPU kernel.
+"""Tiered row-gather Pallas TPU kernels.
 
 Row ids are SCALAR-PREFETCHED; the source BlockSpec's index map is
 data-dependent (block i = row ids[i]), so each grid step DMAs exactly one
 (1, D) row HBM->VMEM — a pure-bandwidth op placed exactly where the paper
-puts its hot pages: the gather stream for embedding rows / expert blocks is
-the measured "few hot pages" stream, and this kernel is the near-tier fast
-path. The int8 variant fuses the far-tier dequant (per-row scale) into the
-same pass so promoted-but-compressed rows cost no extra memory round-trip.
+puts its hot pages: the gather stream for KV pages / embedding rows /
+expert blocks is the measured "few hot pages" stream, and this kernel is
+the near-tier fast path. The int8 variant fuses the far-tier dequant
+(per-row scale) into the same pass so promoted-but-compressed rows cost no
+extra memory round-trip.
+
+``tiered_gather_kernel`` is the fused serving-path kernel: one pass selects
+each row from the near (bf16/f32) or far (int8 + scale) store by a
+prefetched tier bit, dequantizes far rows in-register, and accumulates the
+near-tier hit count into an SMEM cell (constant output block index ->
+the buffer is carried across sequential grid steps, the standard reduction
+pattern). The hit counters are therefore produced at the access point — on
+device, by the same pass that moves the bytes — and feed the MemProf
+profiler streams directly instead of being re-derived host-side.
 
 D is padded to 128 lanes by ops.py; rows are independent so the grid is
 embarrassingly parallel (no scratch carry).
@@ -20,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret
+
 
 def _gather_kernel(ids_ref, src_ref, out_ref):
     out_ref[...] = src_ref[...].astype(out_ref.dtype)
@@ -29,11 +41,12 @@ def _gather_dequant_kernel(ids_ref, src_ref, scale_ref, out_ref):
     out_ref[...] = src_ref[...].astype(jnp.float32) * scale_ref[0, 0]
 
 
-def gather_rows_kernel(src, ids, scales=None, *, interpret: bool = False):
+def gather_rows_kernel(src, ids, scales=None, *, interpret=None):
     """src: (M, D) — D a lane multiple; ids: (N,) int32; scales: (M, 1) or None.
 
     Returns (N, D) f32.
     """
+    interpret = resolve_interpret(interpret)
     m, d = src.shape
     n = ids.shape[0]
 
@@ -69,3 +82,68 @@ def gather_rows_kernel(src, ids, scales=None, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
         interpret=interpret,
     )(ids, src, scales)
+
+
+def _tiered_kernel(tier_ref, hot_ids_ref, cold_ids_ref, hot_ref, cold_ref,
+                   scale_ref, out_ref, hits_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hits_ref[0, 0] = 0
+
+    near = tier_ref[i] == 0
+    hot_row = hot_ref[...].astype(jnp.float32)
+    cold_row = cold_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+    out_ref[...] = jnp.where(near, hot_row, cold_row)
+    hits_ref[0, 0] += jnp.where(near, 1, 0).astype(jnp.int32)
+
+
+def tiered_gather_kernel(hot, cold_q, cold_scales, tier_sel, hot_ids, cold_ids,
+                         *, interpret=None):
+    """Fused two-tier gather with on-device hit counting.
+
+    hot: (Mh, D) f32/bf16; cold_q: (Mc, D) int8; cold_scales: (Mc, 1) f32;
+    tier_sel/hot_ids/cold_ids: (N,) int32 per-gather selectors (tier bit and
+    the row to DMA from each store — masked selectors must be in-range, the
+    unused row is discarded by the tier select).
+
+    Returns (rows (N, D) f32, near_hits (1, 1) int32).
+    """
+    interpret = resolve_interpret(interpret)
+    d = hot.shape[1]
+    n = tier_sel.shape[0]
+
+    def hot_map(i, tier_ref, hot_ids_ref, cold_ids_ref):
+        return (hot_ids_ref[i], 0)
+
+    def cold_map(i, tier_ref, hot_ids_ref, cold_ids_ref):
+        return (cold_ids_ref[i], 0)
+
+    def out_map(i, tier_ref, hot_ids_ref, cold_ids_ref):
+        return (i, 0)
+
+    def hits_map(i, tier_ref, hot_ids_ref, cold_ids_ref):
+        return (0, 0)
+
+    return pl.pallas_call(
+        _tiered_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, d), hot_map),
+                pl.BlockSpec((1, d), cold_map),
+                pl.BlockSpec((1, 1), cold_map, memory_space=pltpu.SMEM),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, d), out_map),
+                pl.BlockSpec((1, 1), hits_map, memory_space=pltpu.SMEM),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tier_sel, hot_ids, cold_ids, hot, cold_q, cold_scales)

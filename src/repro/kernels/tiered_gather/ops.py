@@ -1,12 +1,23 @@
-"""Public tiered-gather ops: lane padding + the two-tier composition."""
+"""Public tiered-gather ops: lane padding + the two-tier composition.
+
+``tiered_lookup_counted`` is the serving decode path's entry point: one
+fused kernel pass resolves every page id against the device tier map,
+gathers the row from the near (bf16/f32) or far (int8 + per-row scale)
+store with the dequant fused in, and returns the near/far hit counts the
+kernel accumulated on device — the counters the engine feeds to the
+MemProf profiler streams. ``tiered_lookup`` keeps the rows-only signature
+for callers that don't consume counters.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tiered_gather.kernel import gather_rows_kernel
+from repro.kernels._interpret import resolve_interpret
+from repro.kernels.tiered_gather.kernel import gather_rows_kernel, tiered_gather_kernel
 
 LANE = 128
 
@@ -18,9 +29,20 @@ def _pad_lanes(x):
     return x, pad
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def gather_rows(src, ids, scales=None, *, interpret: bool = True):
+def _nonempty(x, dtype):
+    """A (>=1, D) store: an empty tier still needs one DMA-able dummy row."""
+    if x.shape[0] == 0:
+        return jnp.zeros((1, x.shape[1]), dtype)
+    return x.astype(dtype)
+
+
+def gather_rows(src, ids, scales=None, *, interpret: Optional[bool] = None):
     """src: (M, D); ids: (N,) -> (N, D) f32 (dequantized if scales given)."""
+    return _gather_rows(src, ids, scales, interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_rows(src, ids, scales, *, interpret):
     d = src.shape[1]
     srcp, _ = _pad_lanes(src)
     sc = None if scales is None else scales.reshape(-1, 1).astype(jnp.float32)
@@ -28,18 +50,51 @@ def gather_rows(src, ids, scales=None, *, interpret: bool = True):
     return out[:, :d]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def tiered_lookup(hot, cold_q, cold_scales, tier, slot, ids, *, interpret: bool = True):
+def tiered_lookup_counted(hot, cold_q, cold_scales, tier, slot, ids,
+                          *, interpret: Optional[bool] = None):
     """Two-tier lookup: near rows from ``hot`` (bf16/f32), far rows from the
     int8 ``cold_q``+``cold_scales`` store, selected by ``tier``/``slot`` maps.
 
-    On real hardware the two gathers run on separate streams (HBM vs host
-    DMA); here both go through the kernel and are merged by tier mask.
+    Returns (rows (N, D) f32, near_hits int32 scalar, far_hits int32 scalar):
+    the hit split is counted inside the kernel, at the access point. On real
+    hardware the two gathers run on separate streams (HBM vs host DMA); here
+    both tiers are DMA'd through one fused pass and merged by the tier bit.
     """
-    s = slot[ids]
-    t = tier[ids]
-    hot_rows = gather_rows(hot, jnp.where(t == 0, s, 0), interpret=interpret)
-    cold_rows = gather_rows(
-        cold_q, jnp.where(t == 1, s, 0), cold_scales, interpret=interpret
+    if ids.shape[0] == 0:
+        z = jnp.zeros((), jnp.int32)
+        return jnp.zeros((0, hot.shape[1]), jnp.float32), z, z
+    rows, near = _tiered_lookup(
+        hot, cold_q, cold_scales, tier, slot, ids, interpret=resolve_interpret(interpret)
     )
-    return jnp.where((t == 0)[:, None], hot_rows, cold_rows)
+    return rows, near, jnp.int32(ids.shape[0]) - near
+
+
+def tiered_lookup(hot, cold_q, cold_scales, tier, slot, ids,
+                  *, interpret: Optional[bool] = None):
+    """Rows-only view of :func:`tiered_lookup_counted`."""
+    return tiered_lookup_counted(
+        hot, cold_q, cold_scales, tier, slot, ids, interpret=interpret
+    )[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _tiered_lookup(hot, cold_q, cold_scales, tier, slot, ids, *, interpret):
+    d = hot.shape[1]
+    ids = ids.astype(jnp.int32)
+    t = tier[ids].astype(jnp.int32)
+    s = slot[ids].astype(jnp.int32)
+    hotp, _ = _pad_lanes(_nonempty(hot, hot.dtype))
+    coldp, _ = _pad_lanes(_nonempty(cold_q, jnp.int8))
+    scales = cold_scales.reshape(-1).astype(jnp.float32)
+    if scales.shape[0] == 0:
+        scales = jnp.ones((1,), jnp.float32)
+    rows, hits = tiered_gather_kernel(
+        hotp,
+        coldp,
+        scales.reshape(-1, 1),
+        t,
+        jnp.where(t == 0, s, 0),
+        jnp.where(t == 1, s, 0),
+        interpret=interpret,
+    )
+    return rows[:, :d], hits[0, 0]

@@ -1,4 +1,4 @@
-"""Oracles for the tiered row-gather kernel."""
+"""Oracles for the tiered row-gather kernels."""
 from __future__ import annotations
 
 import jax
@@ -16,17 +16,35 @@ def gather_rows_ref(src, ids, scales=None):
     return rows
 
 
-def tiered_lookup_ref(hot, cold_q, cold_scales, tier, slot, ids):
-    """Two-tier lookup oracle.
+def tiered_lookup_counted_ref(hot, cold_q, cold_scales, tier, slot, ids):
+    """Two-tier lookup oracle with host-side hit counting.
 
     hot: (Mh, D) bf16/f32 near-tier rows; cold_q: (Mc, D) int8 far-tier rows
     with per-row ``cold_scales`` (Mc,); ``tier[id]`` in {0=hot, 1=cold};
-    ``slot[id]`` = row within its tier. Returns (N, D) f32.
+    ``slot[id]`` = row within its tier. Returns (rows (N, D) f32,
+    near_hits, far_hits) — the counter semantics the device kernel must
+    reproduce bit-exactly (the differential harness's oracle).
     """
+    d = hot.shape[1]
+    if ids.shape[0] == 0:
+        z = jnp.zeros((), jnp.int32)
+        return jnp.zeros((0, d), jnp.float32), z, z
     s = slot[ids]
     t = tier[ids]
+    if hot.shape[0] == 0:
+        hot = jnp.zeros((1, d), hot.dtype)
+    if cold_q.shape[0] == 0:
+        cold_q = jnp.zeros((1, d), cold_q.dtype)
+        cold_scales = jnp.ones((1,), jnp.float32)
     h = hot[jnp.where(t == 0, s, 0)].astype(jnp.float32)
     c = cold_q[jnp.where(t == 1, s, 0)].astype(jnp.float32) * cold_scales[
         jnp.where(t == 1, s, 0)
     ].astype(jnp.float32)[:, None]
-    return jnp.where((t == 0)[:, None], h, c)
+    rows = jnp.where((t == 0)[:, None], h, c)
+    near = (t == 0).sum().astype(jnp.int32)
+    return rows, near, jnp.int32(ids.shape[0]) - near
+
+
+def tiered_lookup_ref(hot, cold_q, cold_scales, tier, slot, ids):
+    """Rows-only view of :func:`tiered_lookup_counted_ref`."""
+    return tiered_lookup_counted_ref(hot, cold_q, cold_scales, tier, slot, ids)[0]

@@ -17,6 +17,21 @@ family); the page table is the management/accounting plane, as in any
 engine where the block manager is host-side (vLLM-style). The Pallas
 paged_attention kernel is the device-side fast path for dense archs
 (examples/serve_tiered.py wires it directly).
+
+Device-executed tiering (``EngineConfig.device_tiering``, env
+``REPRO_DEVICE_TIERING=1``): the decode step's KV page stream is EXECUTED
+against a device-resident tiered store (runtime/tiered_kv.TieredKVCache) —
+near rows in an f32 "HBM" buffer, far rows int8-quantized with per-row
+scales — via the fused kernels/tiered_gather pass. The model's own decode
+math stays exact and untouched (it reads its per-family cache as always);
+what moves on device is the tier plane: the page gathers, the int8
+promote/demote data movement driven by placement pushes (local TPP epochs
+and fleet AutoTierer apply_placement), and the near/far hit counters,
+which are produced in-kernel at the access point and REPLACE the
+host-side tier accounting. With identity scales the device-tiered engine
+is bit-identical to the host-accounted one (same tokens, same counters)
+and tiered reads never diverge from the flat mirror;
+tests/test_tiered_decode.py enforces that equivalence.
 """
 from __future__ import annotations
 
@@ -34,7 +49,13 @@ from repro.core.placement import TieredPlacement
 from repro.core.prefetch import PrefetchEngine
 from repro.core.profiler import AccessProfiler
 from repro.data.requests import Request, RequestGenerator
+from repro.env import env_flag
 from repro.models.api import ModelAPI
+from repro.runtime.tiered_kv import TieredKVCache, sanitize_near_ids
+
+
+def _env_device_tiering() -> bool:
+    return env_flag("REPRO_DEVICE_TIERING", default=False)
 
 
 @dataclasses.dataclass
@@ -49,6 +70,15 @@ class EngineConfig:
     placement_window: int = 16  # engine steps per TPP epoch
     trace_window: int = 8
     trace_period: int = 64
+    # device-executed tiering: route KV page reads through the fused
+    # tiered-gather kernel over a device-resident near/far store
+    device_tiering: bool = dataclasses.field(default_factory=_env_device_tiering)
+    # snap payload rows to the int8 grid so the far tier is lossless —
+    # the "quantization error zeroed" mode of the equivalence oracle
+    tiered_identity_scales: bool = False
+    # differential probe: compare every tiered read against the flat
+    # buffer in-line (tracks the max divergence in stats())
+    tiered_verify: bool = False
 
 
 @dataclasses.dataclass
@@ -110,6 +140,24 @@ class ServingEngine:
             api._jit_decode = jax.jit(api.decode)
         self._decode = api._jit_decode
         self._rng = np.random.default_rng(seed)
+        self._seed = seed
+        # device-executed tiering: a device-resident near/far store whose
+        # tier map mirrors placement.tier and whose fused-kernel lookups
+        # produce the tier-hit counters
+        self.tiered: Optional[TieredKVCache] = None
+        self.tiered_max_err = 0.0  # max tiered-vs-flat read divergence seen
+        self._page_wver = None  # per-page write version (fallback payloads)
+        if e.device_tiering:
+            self.tiered = TieredKVCache(
+                e.n_pages,
+                self._payload_dim(),
+                self.placement.near_capacity,
+                identity_scales=e.tiered_identity_scales,
+            )
+            self._page_wver = np.zeros(e.n_pages, np.int64)
+            # initial fill: position the starting near set without charging
+            # it to the migration books (nothing has been written yet)
+            self.tiered.migrate(self.placement.near_blocks(), account=False)
 
     # ------------------------------------------------------------------
     def _page_bytes(self) -> int:
@@ -117,6 +165,61 @@ class ServingEngine:
         c = self.cfg
         n_layers = getattr(c, "n_layers", 1)
         return self.ecfg.page_size * 2 * c.n_kv_heads * c.head_dim * 2 * n_layers
+
+    # ------------------------------------------------------------------
+    # device-tier payload plumbing
+
+    def _dense_kv(self, cache) -> Optional[jnp.ndarray]:
+        """The (L, B, H, S, D) k-cache when this family exposes one."""
+        k = cache.get("k") if isinstance(cache, dict) else None
+        return k if k is not None and getattr(k, "ndim", 0) == 5 else None
+
+    def _payload_dim(self) -> int:
+        k = self._dense_kv(self.cache)
+        if k is not None:
+            n_layers, _, n_heads, _, head_dim = k.shape
+            return 2 * n_layers * n_heads * head_dim
+        return 128  # recurrent-state families: synthetic payload rows
+
+    def _payload_rows(self, cache, batch_idxs, positions, page_ids) -> jnp.ndarray:
+        """Per-page payload rows for the device tier store (one batched
+        gather for any number of (slot, position) pairs).
+
+        For KV families the row is the real decode data: the k and v vectors
+        of the page's most recently written token, flattened across layers
+        and heads. Recurrent-state families (no per-position KV) fall back
+        to deterministic rows keyed by (page, write-version) — the memory
+        system behavior (gathers, quantization, migration) is identical, only
+        the payload values are synthetic.
+        """
+        k = self._dense_kv(cache)
+        if k is not None:
+            bi = jnp.asarray(batch_idxs, jnp.int32)
+            pos = jnp.asarray(positions, jnp.int32)
+            # advanced indices (batch, seq-pos) broadcast together and land
+            # in front: (n, L, H, Dh) per store
+            kk = k[:, bi, :, pos, :]
+            vv = cache["v"][:, bi, :, pos, :]
+            kv = jnp.concatenate([kk, vv], axis=1)  # (n, 2L, H, Dh)
+            return kv.reshape(len(positions), -1).astype(jnp.float32)
+        rows = np.empty((len(page_ids), self.tiered.row_dim), np.float32)
+        for i, pid in enumerate(page_ids):
+            ver = int(self._page_wver[pid])
+            r = np.random.default_rng((self._seed << 40) ^ (int(pid) << 20) ^ ver)
+            rows[i] = r.standard_normal(self.tiered.row_dim, dtype=np.float32)
+        return jnp.asarray(rows)
+
+    def _tiered_write(self, cache, batch_idxs, positions, page_ids):
+        if self.tiered is None or not len(page_ids):
+            return
+        rows = self._payload_rows(cache, batch_idxs, positions, page_ids)
+        self.tiered.write(np.asarray(page_ids, np.int64), rows)
+        self._page_wver[np.asarray(page_ids, np.int64)] += 1
+
+    def _sync_device_tiers(self):
+        """Mirror placement.tier into the device store (real data movement)."""
+        if self.tiered is not None:
+            self.tiered.migrate(self.placement.near_blocks())
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -137,6 +240,15 @@ class ServingEngine:
             batch = self._prefill_batch(tokens)
             logits1, cache1 = self.api.prefill(self.params, batch, max_len=self.ecfg.max_len)
             self._write_slot(slot_idx, cache1, len(tokens))
+            if self.tiered is not None:
+                # seed the device tier store with this sequence's page
+                # payloads (each page keyed by its last prefilled token)
+                pages = self.pagetable.seqs[req.rid]
+                ps = self.ecfg.page_size
+                positions = [
+                    min((i + 1) * ps, len(tokens)) - 1 for i in range(len(pages))
+                ]
+                self._tiered_write(cache1, [0] * len(pages), positions, pages)
             nxt = int(jnp.argmax(logits1[0, -1, : self.cfg.vocab_size]))
             self.next_tokens[slot_idx] = nxt
             slot.seq_id = req.rid
@@ -181,21 +293,38 @@ class ServingEngine:
     def _account_decode(self):
         """Per decode step: every active sequence touches all its KV pages
         (attention reads the whole cache) — that stream drives placement,
-        prefetch, the profiler and the tracer."""
+        prefetch, the profiler and the tracer.
+
+        In device-tiering mode the read is EXECUTED, not modeled: the pages'
+        payload rows are gathered through the fused tiered kernel and the
+        near/far hit counters come back from the device, produced by the
+        same pass that moved the bytes."""
         for slot in self.slots:
             if not slot.active:
                 continue
             pages = np.array(self.pagetable.seqs[slot.seq_id], np.int64)
             if pages.size == 0:
                 continue
-            self.placement.access(pages)
             far = self.placement.tier[pages] == 1
+            if self.tiered is not None:
+                rows, near_n, far_n = self.tiered.lookup(pages)
+                self.placement.stats.near_hits += near_n
+                self.placement.stats.far_hits += far_n
+                if self.ecfg.tiered_verify:
+                    err = float(
+                        jnp.max(jnp.abs(rows - self.tiered.lookup_flat(pages)))
+                    )
+                    self.tiered_max_err = max(self.tiered_max_err, err)
+            else:
+                self.placement.access(pages)
+                near_n = int((~far).sum())
+                far_n = int(far.sum())
             self.prefetch.access_many(pages, far)
             self.profiler.record("kv", pages)
             self.tracer.record(pages, is_write=False)
             ts = self._tenant(slot.request.tenant)
-            ts["near_hits"] += int((~far).sum())
-            ts["far_hits"] += int(far.sum())
+            ts["near_hits"] += near_n
+            ts["far_hits"] += far_n
             self.profiler.record(f"kv.{slot.request.tenant}", pages)
             for hook in self.access_hooks:
                 hook(pages, False)
@@ -218,11 +347,15 @@ class ServingEngine:
         decoded = 0
         written: List[int] = []
         written_tenant: List[str] = []
-        for slot in self.slots:
+        written_slot: List[int] = []
+        written_pos: List[int] = []
+        for slot_idx, slot in enumerate(self.slots):
             if not slot.active:
                 continue
             written.append(self.pagetable.append_token(slot.seq_id))
             written_tenant.append(slot.request.tenant)
+            written_slot.append(slot_idx)
+            written_pos.append(self.pagetable.seq_len[slot.seq_id] - 1)
             slot.remaining -= 1
             decoded += 1
             ts = self._tenant(slot.request.tenant)
@@ -237,6 +370,11 @@ class ServingEngine:
             # the decoded token's KV write — gives the access stream a real
             # R:W mix (Table 6 validation compares read:write ratios)
             w = np.asarray(written, np.int64)
+            if self.tiered is not None:
+                # the write is executed on device too: every written page's
+                # payload row lands in its current tier (quantized if far),
+                # one batched scatter for the whole step
+                self._tiered_write(self.cache, written_slot, written_pos, written)
             self.profiler.record("kv", w, rw="w")
             by_tenant: Dict[str, List[int]] = {}
             for page, tenant in zip(written, written_tenant):
@@ -255,6 +393,7 @@ class ServingEngine:
             wins = self.profiler.windows("kv")
             if wins:
                 self.placement.step(wins[-1])
+                self._sync_device_tiers()
         return decoded
 
     def run(self, gen: RequestGenerator, n_requests: int, max_steps: int = 10_000) -> dict:
@@ -303,9 +442,12 @@ class ServingEngine:
         Replaces the local TPP view wholesale; returns number of pages whose
         tier changed (the migration traffic this push costs).
         """
-        near_ids = np.asarray(near_ids, np.int64).reshape(-1)
-        near_ids = near_ids[(near_ids >= 0) & (near_ids < self.ecfg.n_pages)]
-        near_ids = near_ids[: self.placement.near_capacity]
+        # same sanitize rule as the device store, or the two tier views
+        # diverge; dedup must precede the capacity cut so duplicate ids
+        # neither double-count promotions nor shrink the near set
+        near_ids = sanitize_near_ids(
+            near_ids, self.ecfg.n_pages, self.placement.near_capacity
+        )
         old = self.placement.tier.copy()
         self.placement.tier[:] = 1
         self.placement.tier[near_ids] = 0
@@ -315,6 +457,9 @@ class ServingEngine:
         st.promotions += promoted
         st.demotions += demoted
         st.migrated_bytes += (promoted + demoted) * self.placement.block_bytes
+        # device mode: the push is real data movement — promotions copy
+        # far->near with dequantization, demotions quantize near->far
+        self._sync_device_tiers()
         return promoted + demoted
 
     def live_counters(self) -> dict:
@@ -331,7 +476,11 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         ps = self.prefetch.stats
+        device = None
+        if self.tiered is not None:
+            device = {**self.tiered.stats(), "max_read_error": self.tiered_max_err}
         return {
+            "device_tiering": device,
             "tokens_decoded": self.tokens_decoded,
             "requests_finished": len(self.finished),
             "prefill_tokens": self.prefill_tokens,

@@ -1,0 +1,281 @@
+"""Device-resident tiered KV page store — the paper's near/far split, executed.
+
+Before this module the serving engine only *accounted* the near/far tier
+split host-side (core/placement keeps a tier byte per page) while the
+decode math read one flat KV buffer. Here the split is real device state:
+
+  * ``near``  — (near_capacity, D) f32/bf16 rows, the small high-bandwidth
+    "HBM" tier that captures most of the bandwidth because few pages are hot;
+  * ``far_q`` + ``far_scale`` — (n_pages, D) int8 rows with per-row scales,
+    the capacity tier (every page has a reserved far slot, so demotion never
+    allocates);
+  * ``tier`` / ``slot`` — device int32 maps consumed by the fused Pallas
+    kernel (kernels/tiered_gather): tier bit selects the store, slot the row.
+
+Reads go through :meth:`lookup` → one fused kernel pass (near gather + far
+gather with dequant + on-device near/far hit counting). Placement pushes go
+through :meth:`migrate` → real data movement: promotions dequantize far
+rows into freed near slots, demotions quantize near rows back into their
+far slots. ``flat`` mirrors every write into the legacy flat f32 buffer;
+it is the differential-test oracle (and the "flat decode" baseline the
+benchmark times) — with ``identity_scales=True`` rows are snapped to the
+int8 grid at write time, so tiered reads are bit-identical to flat reads
+through any promote/demote history.
+
+The flat mirror is kept unconditionally: at repro scale it costs one extra
+scatter per write and an (n_pages, D) f32 buffer, and in exchange every
+store — not just verify-mode engines — can be differentially probed
+(``lookup_flat`` / ``max_abs_error``) by tests and the benchmark's
+baseline. A memory-constrained deployment would gate it behind a flag.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tiered_gather.ops import gather_rows, tiered_lookup_counted
+
+NEAR, FAR = 0, 1
+_QMAX = 127.0
+
+
+def sanitize_near_ids(near_ids, n_pages: int, capacity: int) -> np.ndarray:
+    """Canonical near-set sanitizer shared by the engine's apply_placement
+    and TieredKVCache.migrate — the two views MUST apply the same rule or
+    placement.tier and the device tier map silently diverge: drop
+    out-of-range ids, dedup keeping first-seen order, then cut to capacity."""
+    ids = np.asarray(near_ids, np.int64).reshape(-1)
+    ids = ids[(ids >= 0) & (ids < n_pages)]
+    ids = ids[np.sort(np.unique(ids, return_index=True)[1])]
+    return ids[:capacity]
+
+
+class TieredKVCache:
+    def __init__(
+        self,
+        n_pages: int,
+        row_dim: int,
+        near_capacity: int,
+        *,
+        near_dtype=jnp.float32,
+        identity_scales: bool = False,
+        interpret: Optional[bool] = None,
+    ):
+        assert 0 < near_capacity <= n_pages
+        self.n_pages = n_pages
+        self.row_dim = row_dim
+        self.near_capacity = near_capacity
+        self.identity_scales = identity_scales
+        self.interpret = interpret
+        # device stores
+        self.near = jnp.zeros((near_capacity, row_dim), near_dtype)
+        self.far_q = jnp.zeros((n_pages, row_dim), jnp.int8)
+        self.far_scale = jnp.ones((n_pages,), jnp.float32)
+        self.flat = jnp.zeros((n_pages, row_dim), jnp.float32)
+        # host mirrors of the device maps (slot allocation is host-side
+        # bookkeeping, exactly like the page table itself)
+        self.tier_host = np.full(n_pages, FAR, np.int32)
+        self.slot_host = np.arange(n_pages, dtype=np.int32)  # far slot == pid
+        self._free_near = list(range(near_capacity - 1, -1, -1))
+        self._maps_dirty = True
+        self._tier_dev = None
+        self._slot_dev = None
+        # counters
+        self.near_hits = 0
+        self.far_hits = 0
+        self.lookups = 0
+        self.moved_rows = 0
+        self.moved_bytes = 0
+        self.writes = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def near_row_bytes(self) -> int:
+        """Bytes a promotion writes into the near tier (f32/bf16 row)."""
+        return self.row_dim * self.near.dtype.itemsize
+
+    @property
+    def far_row_bytes(self) -> int:
+        """Bytes a demotion writes into the far tier (int8 row + scale)."""
+        return self.row_dim + 4
+
+    @property
+    def near_count(self) -> int:
+        return int((self.tier_host == NEAR).sum())
+
+    def _device_maps(self):
+        if self._maps_dirty:
+            self._tier_dev = jnp.asarray(self.tier_host)
+            self._slot_dev = jnp.asarray(self.slot_host)
+            self._maps_dirty = False
+        return self._tier_dev, self._slot_dev
+
+    def _quantize(self, rows: jnp.ndarray):
+        """Per-row symmetric int8 quantization (identity scales: scale=1)."""
+        rows = rows.astype(jnp.float32)
+        if self.identity_scales:
+            scale = jnp.ones((rows.shape[0],), jnp.float32)
+        else:
+            absmax = jnp.max(jnp.abs(rows), axis=1)
+            scale = jnp.maximum(absmax, 1e-30) / _QMAX
+        q = jnp.clip(jnp.round(rows / scale[:, None]), -_QMAX, _QMAX).astype(jnp.int8)
+        return q, scale
+
+    def snap(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """Snap payload rows onto the representable grid.
+
+        Under identity scales that is the int8 integer grid — the
+        "quantization error zeroed" mode the equivalence oracle runs in;
+        otherwise rows pass through unchanged (far-tier storage is lossy
+        and the round-trip error is bounded by scale/2 per element).
+        """
+        rows = rows.astype(jnp.float32)
+        if self.identity_scales:
+            rows = jnp.clip(jnp.round(rows), -_QMAX, _QMAX)
+        return rows
+
+    # ------------------------------------------------------------------
+    def write(self, page_ids, rows):
+        """Write payload rows for ``page_ids`` into their CURRENT tier.
+
+        Near pages land in their near slot at full precision; far pages are
+        quantized into their reserved far slot. ``flat`` (the legacy flat
+        buffer / differential oracle) always receives the full-precision row.
+        Duplicate ids keep the last row (page-table writes are ordered).
+        """
+        pids = np.asarray(page_ids, np.int64).reshape(-1)
+        rows = self.snap(jnp.asarray(rows).reshape(pids.size, self.row_dim))
+        if pids.size == 0:
+            return
+        # keep the LAST write per page id
+        _, last = np.unique(pids[::-1], return_index=True)
+        keep = (pids.size - 1) - last
+        pids, rows = pids[keep], rows[jnp.asarray(keep)]
+        self.flat = self.flat.at[pids].set(rows)
+        near_mask = self.tier_host[pids] == NEAR
+        if near_mask.any():
+            np_ids = pids[near_mask]
+            nrows = rows[jnp.asarray(np.flatnonzero(near_mask))]
+            self.near = self.near.at[self.slot_host[np_ids]].set(
+                nrows.astype(self.near.dtype)
+            )
+        if (~near_mask).any():
+            fp_ids = pids[~near_mask]
+            frows = rows[jnp.asarray(np.flatnonzero(~near_mask))]
+            q, scale = self._quantize(frows)
+            self.far_q = self.far_q.at[fp_ids].set(q)
+            self.far_scale = self.far_scale.at[fp_ids].set(scale)
+        self.writes += int(pids.size)
+
+    # ------------------------------------------------------------------
+    def lookup(self, page_ids):
+        """Gather payload rows for ``page_ids`` through the fused tiered
+        kernel. Returns (rows (N, D) f32, near_hits int, far_hits int) —
+        the hit split counted on device, at the access point.
+
+        The counters are synced to host ints per call because the engine
+        charges them to per-slot tenant books immediately; a
+        latency-critical deployment would keep them on device and drain
+        once per step."""
+        ids = jnp.asarray(np.asarray(page_ids, np.int64).reshape(-1), jnp.int32)
+        tier, slot = self._device_maps()
+        rows, near, far = tiered_lookup_counted(
+            self.near, self.far_q, self.far_scale, tier, slot, ids,
+            interpret=self.interpret,
+        )
+        n, f = int(near), int(far)
+        self.near_hits += n
+        self.far_hits += f
+        self.lookups += 1
+        return rows, n, f
+
+    def lookup_flat(self, page_ids):
+        """The legacy flat-buffer gather (baseline + differential oracle)."""
+        ids = jnp.asarray(np.asarray(page_ids, np.int64).reshape(-1), jnp.int32)
+        return gather_rows(self.flat, ids, interpret=self.interpret)
+
+    def max_abs_error(self, page_ids) -> float:
+        """Tiered-vs-flat read divergence for ``page_ids`` (0.0 under
+        identity scales). Diagnostic only: bypasses the hit counters so a
+        probe never perturbs the ground-truth accounting."""
+        ids = np.asarray(page_ids, np.int64).reshape(-1)
+        if ids.size == 0:
+            return 0.0
+        tier, slot = self._device_maps()
+        rows, _, _ = tiered_lookup_counted(
+            self.near, self.far_q, self.far_scale, tier, slot,
+            jnp.asarray(ids, jnp.int32), interpret=self.interpret,
+        )
+        return float(jnp.max(jnp.abs(rows - self.lookup_flat(ids))))
+
+    # ------------------------------------------------------------------
+    def migrate(self, near_ids, account: bool = True) -> dict:
+        """Reconcile the device tiers with a planned near set — REAL moves.
+
+        Demotions run first (quantize near row -> its reserved far slot,
+        freeing the near slot), then promotions (dequantize far row -> a
+        free near slot). Total pages are conserved by construction (tier is
+        a total map) and the near tier never exceeds ``near_capacity``.
+        Returns {"promoted", "demoted", "moved_rows", "moved_bytes"}.
+
+        ``account=False`` skips the moved_rows/moved_bytes accumulators:
+        the constructor-time initial fill loads empty rows into position,
+        it is not migration traffic.
+        """
+        want = np.zeros(self.n_pages, bool)
+        want[sanitize_near_ids(near_ids, self.n_pages, self.near_capacity)] = True
+        cur = self.tier_host == NEAR
+        demote = np.flatnonzero(cur & ~want)
+        promote = np.flatnonzero(~cur & want)
+        if demote.size:
+            d_slots = self.slot_host[demote].copy()
+            rows = self.near[jnp.asarray(d_slots)].astype(jnp.float32)
+            q, scale = self._quantize(rows)
+            self.far_q = self.far_q.at[demote].set(q)
+            self.far_scale = self.far_scale.at[demote].set(scale)
+            self.tier_host[demote] = FAR
+            self.slot_host[demote] = demote  # far slot == page id
+            self._free_near.extend(int(s) for s in d_slots)
+        if promote.size:
+            assert len(self._free_near) >= promote.size, "near tier overflow"
+            slots = np.array([self._free_near.pop() for _ in range(promote.size)], np.int32)
+            rows = self.far_q[jnp.asarray(promote)].astype(jnp.float32) * self.far_scale[
+                jnp.asarray(promote)
+            ][:, None]
+            self.near = self.near.at[jnp.asarray(slots)].set(rows.astype(self.near.dtype))
+            self.tier_host[promote] = NEAR
+            self.slot_host[promote] = slots
+        if demote.size or promote.size:
+            self._maps_dirty = True
+        moved = int(promote.size + demote.size)
+        # bytes written into the destination tier: promotions land full-
+        # precision rows in near, demotions land int8 rows + a scale in far
+        moved_bytes = int(
+            promote.size * self.near_row_bytes + demote.size * self.far_row_bytes
+        )
+        if account:
+            self.moved_rows += moved
+            self.moved_bytes += moved_bytes
+        return {
+            "promoted": int(promote.size),
+            "demoted": int(demote.size),
+            "moved_rows": moved,
+            "moved_bytes": moved_bytes,
+        }
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        tot = self.near_hits + self.far_hits
+        return {
+            "near_count": self.near_count,
+            "near_capacity": self.near_capacity,
+            "near_hits": self.near_hits,
+            "far_hits": self.far_hits,
+            "near_hit_rate": self.near_hits / max(tot, 1),
+            "lookups": self.lookups,
+            "writes": self.writes,
+            "moved_rows": self.moved_rows,
+            "moved_bytes": self.moved_bytes,
+        }

@@ -22,6 +22,10 @@ def test_tenant_interference_is_registered():
     assert "tenant_interference" in bench_run.MODULES
 
 
+def test_tiered_decode_bench_is_registered():
+    assert "tiered_decode_bench" in bench_run.MODULES
+
+
 @pytest.mark.parametrize("name", bench_run.MODULES)
 def test_registered_benchmark_importable_and_callable(name):
     mod = importlib.import_module(name)
