@@ -1,0 +1,134 @@
+"""Dispatch/sync budget of the tiered decode step: per-slot vs segmented.
+
+The serving engine's hot path used to issue one tiered-gather kernel launch
+PER ACTIVE SLOT per decode step, each blocking on an `int(near), int(far)`
+counter readback — 8-32 dispatches + host syncs where one would do. The
+segmented path (EngineConfig.segmented_lookup, the default) concatenates
+every active slot's page ids into ONE ragged kernel pass with per-segment
+hit counts accumulated in a device counter plane, drained once per profiler
+window. This bench runs the SAME workload through both paths at two slot
+counts and reports:
+
+  * tokens/s            — end-to-end decode throughput (wall clock);
+  * dispatches-per-step — tiered-gather kernel launches per engine step
+                          (segmented: exactly 1; per-slot: ~active slots);
+  * host-syncs-per-step — counter-plane round-trips per engine step
+                          (segmented: 1/placement_window; per-slot: ~slots).
+
+Emits ``BENCH_decode.json`` next to this file — the decode dispatch-budget
+baseline the next perf PR regresses against. Self-checks: the segmented
+path must hold the 1-dispatch budget and beat the per-slot baseline by
+>=1.3x tokens/s at the larger slot count.
+"""
+import dataclasses
+import json
+import pathlib
+import time
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator
+
+from _common import engine_for, fmt_table
+
+SLOT_COUNTS = (4, 16)
+MODES = ("per-slot", "segmented")
+SPEEDUP_FLOOR = 1.3  # acceptance: segmented >= 1.3x per-slot at 16 slots
+
+
+def _run(mode: str, n_slots: int, n_requests=None, seed=0):
+    cfg, eng = engine_for(
+        seed=seed,
+        max_batch=n_slots,
+        max_len=96,
+        n_pages=1024,
+        near_frac=0.05,
+        placement_window=8,
+        device_tiering=True,
+        segmented_lookup=(mode == "segmented"),
+    )
+    # long prompts + enough requests to keep every slot busy: the budget
+    # gap is per active slot, so the bench must actually fill the batch
+    n_requests = n_requests if n_requests is not None else 3 * n_slots
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=64, decode_mean=12,
+        prefix_share=0.5, n_prefixes=2,
+    )
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=seed)
+    t0 = time.time()
+    stats = eng.run(gen, n_requests=n_requests, max_steps=3000)
+    dt = time.time() - t0
+    dev = stats["device_tiering"]
+    return {
+        "tokens": stats["tokens_decoded"],
+        "steps": eng.engine_steps,
+        "tokens_per_s": stats["tokens_decoded"] / max(dt, 1e-9),
+        "dispatches_per_step": dev["dispatches_per_step"],
+        "host_syncs_per_step": dev["host_syncs_per_step"],
+        "near_hit_rate": stats["near_hit_rate"],
+    }
+
+
+def main():
+    # untimed warm-up: pay model-decode + kernel compilation for every
+    # (batch, path) shape outside the timed cells
+    for n_slots in SLOT_COUNTS:
+        for mode in MODES:
+            _run(mode, n_slots, n_requests=2)
+    rows, out = [], {}
+    for n_slots in SLOT_COUNTS:
+        for mode in MODES:
+            r = _run(mode, n_slots)
+            out[f"{mode}@{n_slots}"] = r
+            rows.append(
+                (
+                    n_slots,
+                    mode,
+                    f"{r['tokens_per_s']:8.1f}",
+                    f"{r['dispatches_per_step']:.2f}",
+                    f"{r['host_syncs_per_step']:.3f}",
+                    r["tokens"],
+                )
+            )
+    print("[decode_dispatch] per-slot vs segmented tiered decode")
+    print(
+        fmt_table(
+            rows,
+            ["slots", "path", "tok/s", "disp/step", "syncs/step", "tokens"],
+        )
+    )
+    speedups = {
+        n: out[f"segmented@{n}"]["tokens_per_s"] / max(out[f"per-slot@{n}"]["tokens_per_s"], 1e-9)
+        for n in SLOT_COUNTS
+    }
+    for n, s in speedups.items():
+        print(f"segmented speedup at {n} slots: {s:.2f}x")
+    baseline = {
+        "results": out,
+        "speedups": {str(n): s for n, s in speedups.items()},
+        "slot_counts": list(SLOT_COUNTS),
+    }
+    path = pathlib.Path(__file__).resolve().parent / "BENCH_decode.json"
+    path.write_text(json.dumps(baseline, indent=2, sort_keys=True) + "\n")
+    print(f"baseline written to {path}")
+    # self-checks: the budget and the payoff
+    for n in SLOT_COUNTS:
+        seg = out[f"segmented@{n}"]
+        if not seg["dispatches_per_step"] <= 1.0 + 1e-9:
+            print(f"[decode_dispatch] FAILED: segmented path broke the "
+                  f"1-dispatch budget at {n} slots ({seg['dispatches_per_step']:.2f})")
+            return 1
+        if not seg["host_syncs_per_step"] < 1.0:
+            print(f"[decode_dispatch] FAILED: segmented path syncs every "
+                  f"step at {n} slots ({seg['host_syncs_per_step']:.2f})")
+            return 1
+    big = SLOT_COUNTS[-1]
+    if speedups[big] < SPEEDUP_FLOOR:
+        print(f"[decode_dispatch] FAILED: segmented only {speedups[big]:.2f}x "
+              f"per-slot at {big} slots (need >= {SPEEDUP_FLOOR}x)")
+        return 1
+    return baseline
+
+
+if __name__ == "__main__":
+    rc = main()
+    raise SystemExit(rc if isinstance(rc, int) else 0)

@@ -25,6 +25,7 @@ MODULES = [
     "straggler_bench",
     "tenant_interference",
     "tiered_decode_bench",
+    "decode_dispatch_bench",
     "kernels_bench",
 ]
 

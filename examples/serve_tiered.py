@@ -20,6 +20,19 @@ it, pinned to the flat mirror by the differential harness. With
 host-accounted engine — same tokens, same counters — which is exactly what
 tests/test_tiered_decode.py enforces.
 
+Single-dispatch step + drain cadence: one engine step issues ONE segmented
+tiered-gather dispatch — every active slot's page ids concatenated with a
+segment-offset vector, per-slot near/far hits accumulated into a
+device-resident counter plane in the same kernel pass — and ZERO mandatory
+host syncs. The next-token argmax is fused into the jitted decode (cache
+buffers donated), so the decode feedback loop never leaves the device
+either. The counter plane drains once per profiler window
+(``placement_window`` steps; also at stats/export/placement-push
+boundaries), and the drained deltas charge placement stats and per-tenant
+books bit-identically to per-step charging. benchmarks/decode_dispatch_bench.py
+measures the budget: 1 dispatch + ~1/window syncs per step vs ~slots of
+each on the retired per-slot path (``EngineConfig.segmented_lookup=False``).
+
 PYTHONPATH=src python examples/serve_tiered.py
 """
 import dataclasses

@@ -60,6 +60,14 @@ class TierEpoch:
     # bytes the push actually moved through the hosts' device tier stores
     # (promote dequants + demote quants); 0 when hosts run host-accounted
     device_moved_bytes: int = 0
+    # fleet-wide dispatch/sync budget at plan time: CUMULATIVE tiered-gather
+    # kernel launches and counter-plane host syncs across the live replica
+    # set (snapshots, not per-epoch deltas like device_moved_bytes — diff
+    # consecutive epochs for a rate; retired hosts are excluded). Epochs
+    # read DRAINED device counters — the profile export that feeds the
+    # plan is a drain boundary — so these never lag the plan's inputs
+    device_dispatches: int = 0
+    device_host_syncs: int = 0
 
 
 class AutoTierer:
@@ -116,6 +124,10 @@ class AutoTierer:
                 continue
             near = tc[p.hot_blocks[p.hot_blocks < tc.size]].sum()
             tenant_frac[t] = float(near / total)
+        # live hosts only: extra_profiles are frozen snapshots of retired
+        # hosts and would inflate the budget for the rest of the run
+        live = profiles[: len(self.replicas)]
+        dev = [pr.device_tiering for pr in live if pr.device_tiering]
         epoch = TierEpoch(
             int(now),
             p.hot_blocks,
@@ -126,6 +138,8 @@ class AutoTierer:
             vtime=float(now),
             n_replicas=len(self.replicas),
             device_moved_bytes=device_moved,
+            device_dispatches=sum(d["dispatches"] for d in dev),
+            device_host_syncs=sum(d["host_syncs"] for d in dev),
         )
         self.history.append(epoch)
         return epoch

@@ -48,8 +48,10 @@ class ReplicaProfile:
     clock_offset: float = 0.0
     # device-executed tiering (runtime/tiered_kv): when the host runs the
     # fused tiered-gather decode path this carries the store's counters
-    # (near/far hits counted on device, bytes actually moved by placement
-    # pushes); None for hosts on the host-accounted path
+    # (near/far hits counted on device and DRAINED at export — the export
+    # boundary is a drain boundary, so fleet epochs never read a stale
+    # plane — plus the dispatch/host-sync budget and bytes actually moved
+    # by placement pushes); None for hosts on the host-accounted path
     device_tiering: Optional[dict] = None
 
     @property
@@ -137,6 +139,11 @@ class Replica:
     def export_profile(self) -> ReplicaProfile:
         eng = self.engine
         eng.tracer.stitch()  # flush any open window into tracer.windows
+        # drain the device counter plane first: fleet epochs and stitched
+        # traces read drained books, never per-step ints (live_counters
+        # drains too, but the explicit call keeps tenant_stats — read
+        # below — at the same boundary)
+        eng.drain_tier_counters()
         live = eng.live_counters()
         sim = self.live_sim
         tenants = {

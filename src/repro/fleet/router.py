@@ -30,7 +30,8 @@ three levers as core/tiering's roofline, in request-serving units.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -136,7 +137,10 @@ class FleetRouter:
         self.policy = policy
         self.admission = admission
         self.tenant_weights = dict(tenant_weights or {})
-        self.tenant_queues: Dict[str, List[Request]] = {}
+        # deques: dispatch pops the head of a tenant queue on every
+        # completion batch, and list.pop(0) is O(queue) — O(n^2) under a
+        # burst-tenant backlog
+        self.tenant_queues: Dict[str, Deque[Request]] = {}
         self._vtime: Dict[str, float] = {}  # weighted-fair virtual time
         self.on_step: List = []
         self.fleet_steps = 0
@@ -194,7 +198,7 @@ class FleetRouter:
             self.shed += 1
             self.shed_by[tenant] = self.shed_by.get(tenant, 0) + 1
             return False
-        self.tenant_queues.setdefault(tenant, []).append(req)
+        self.tenant_queues.setdefault(tenant, deque()).append(req)
         self._enqueue_time[id(req)] = self._now
         return True
 
@@ -215,7 +219,7 @@ class FleetRouter:
             tenant = self._pick_tenant()
             if tenant is None:
                 break
-            req = self.tenant_queues[tenant].pop(0)
+            req = self.tenant_queues[tenant].popleft()
             targets[self.policy.choose(req, targets)].submit(req)
             wait = self._now - self._enqueue_time.pop(id(req), self._now)
             self.wait_samples.setdefault(tenant, []).append(wait)
@@ -288,7 +292,7 @@ class FleetRouter:
         if lockstep is None:
             lockstep = env_flag(_LOCKSTEP_ENV, default=False)
         it = iter(gen)
-        pending = [next(it) for _ in range(n_requests)]
+        pending = deque(next(it) for _ in range(n_requests))
         if lockstep:
             self._run_lockstep(pending, max_steps, submit_per_step)
         else:
@@ -304,7 +308,7 @@ class FleetRouter:
         steps = 0
         while (pending or not self.drained) and steps < max_steps:
             for _ in range(min(submit_per_step or 0, len(pending))):
-                self.offer(pending.pop(0))
+                self.offer(pending.popleft())
             self.dispatch(max(self.free_slots, 0))
             self.step()
             steps += 1
@@ -335,7 +339,7 @@ class FleetRouter:
             def arrive():
                 self._now = sched.now  # offers stamp enqueue at batch time
                 for _ in range(min(submit_per_step, len(pending))):
-                    self.offer(pending.pop(0))
+                    self.offer(pending.popleft())
                 # lockstep offers at iteration starts 0..max_steps-1, so
                 # arrivals stop strictly before the horizon — an extra
                 # batch at t == horizon would break truncated-run equality

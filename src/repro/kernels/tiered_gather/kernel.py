@@ -18,6 +18,14 @@ pattern). The hit counters are therefore produced at the access point — on
 device, by the same pass that moves the bytes — and feed the MemProf
 profiler streams directly instead of being re-derived host-side.
 
+``tiered_segmented_kernel`` is the step-wide ragged variant: all active
+decode slots' page ids are concatenated into ONE id vector with a
+prefetched segment index per gather, and the same pass accumulates a
+per-segment (near, far) hit pair into an SMEM counter table. One engine
+step therefore costs one kernel dispatch regardless of slot count, and the
+counters never leave the device — the serving engine drains them in
+profiler windows instead of syncing `int(near)` per slot per step.
+
 D is padded to 128 lanes by ops.py; rows are independent so the grid is
 embarrassingly parallel (no scratch carry).
 """
@@ -97,6 +105,82 @@ def _tiered_kernel(tier_ref, hot_ids_ref, cold_ids_ref, hot_ref, cold_ref,
     cold_row = cold_ref[...].astype(jnp.float32) * scale_ref[0, 0]
     out_ref[...] = jnp.where(near, hot_row, cold_row)
     hits_ref[0, 0] += jnp.where(near, 1, 0).astype(jnp.int32)
+
+
+def _tiered_seg_kernel(tier_ref, hot_ids_ref, cold_ids_ref, seg_ref, hot_ref,
+                       cold_ref, scale_ref, out_ref, seghits_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        def zero(j, carry):
+            seghits_ref[j, 0] = 0
+            seghits_ref[j, 1] = 0
+            return carry
+
+        jax.lax.fori_loop(0, seghits_ref.shape[0], zero, 0)
+
+    near = tier_ref[i] == 0
+    hot_row = hot_ref[...].astype(jnp.float32)
+    cold_row = cold_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+    out_ref[...] = jnp.where(near, hot_row, cold_row)
+    s = seg_ref[i]
+    inc = jnp.where(near, 1, 0).astype(jnp.int32)
+    seghits_ref[s, 0] += inc
+    seghits_ref[s, 1] += 1 - inc
+
+
+def tiered_segmented_kernel(hot, cold_q, cold_scales, tier_sel, hot_ids,
+                            cold_ids, seg_of, n_segments, *, interpret=None):
+    """Ragged (segmented) two-tier gather with per-segment hit counting.
+
+    Same stores/selectors as :func:`tiered_gather_kernel`, plus ``seg_of``
+    (N,) int32 mapping each gather to a segment in [0, n_segments). The
+    SMEM counter table (n_segments, 2) — column 0 near hits, column 1 far
+    hits — uses a constant output block index, so it is carried across the
+    sequential grid steps and accumulated by the same pass that DMAs the
+    rows. Callers batching ragged id sets to a fixed bucket size point the
+    padding at a sacrificial segment and slice it off.
+
+    Returns (rows (N, D) f32, seg_hits (n_segments, 2) int32).
+    """
+    interpret = resolve_interpret(interpret)
+    d = hot.shape[1]
+    n = tier_sel.shape[0]
+
+    def hot_map(i, tier_ref, hot_ids_ref, cold_ids_ref, seg_ref):
+        return (hot_ids_ref[i], 0)
+
+    def cold_map(i, tier_ref, hot_ids_ref, cold_ids_ref, seg_ref):
+        return (cold_ids_ref[i], 0)
+
+    def out_map(i, tier_ref, hot_ids_ref, cold_ids_ref, seg_ref):
+        return (i, 0)
+
+    def hits_map(i, tier_ref, hot_ids_ref, cold_ids_ref, seg_ref):
+        return (0, 0)
+
+    return pl.pallas_call(
+        _tiered_seg_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, d), hot_map),
+                pl.BlockSpec((1, d), cold_map),
+                pl.BlockSpec((1, 1), cold_map, memory_space=pltpu.SMEM),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, d), out_map),
+                pl.BlockSpec((n_segments, 2), hits_map, memory_space=pltpu.SMEM),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_segments, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tier_sel, hot_ids, cold_ids, seg_of, hot, cold_q, cold_scales)
 
 
 def tiered_gather_kernel(hot, cold_q, cold_scales, tier_sel, hot_ids, cold_ids,

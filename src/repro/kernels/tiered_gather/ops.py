@@ -1,12 +1,17 @@
 """Public tiered-gather ops: lane padding + the two-tier composition.
 
-``tiered_lookup_counted`` is the serving decode path's entry point: one
-fused kernel pass resolves every page id against the device tier map,
-gathers the row from the near (bf16/f32) or far (int8 + per-row scale)
-store with the dequant fused in, and returns the near/far hit counts the
-kernel accumulated on device — the counters the engine feeds to the
-MemProf profiler streams. ``tiered_lookup`` keeps the rows-only signature
-for callers that don't consume counters.
+``tiered_lookup_segments`` is the serving decode path's entry point: ONE
+fused kernel pass resolves a whole engine step — every active slot's page
+ids concatenated, with a per-gather segment index — against the device
+tier map, gathers each row from the near (bf16/f32) or far (int8 +
+per-row scale) store with the dequant fused in, and accumulates a
+per-segment (near, far) hit pair on device. The counters stay device
+arrays: nothing here forces a host sync, which is the whole point — the
+engine drains them once per profiler window.
+
+``tiered_lookup_counted`` is the per-call variant (one segment, counters
+returned as int32 scalars); ``tiered_lookup`` keeps the rows-only
+signature for callers that don't consume counters.
 """
 from __future__ import annotations
 
@@ -17,7 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels._interpret import resolve_interpret
-from repro.kernels.tiered_gather.kernel import gather_rows_kernel, tiered_gather_kernel
+from repro.kernels.tiered_gather.kernel import (
+    gather_rows_kernel,
+    tiered_gather_kernel,
+    tiered_segmented_kernel,
+)
 
 LANE = 128
 
@@ -67,6 +76,56 @@ def tiered_lookup_counted(hot, cold_q, cold_scales, tier, slot, ids,
         hot, cold_q, cold_scales, tier, slot, ids, interpret=resolve_interpret(interpret)
     )
     return rows, near, jnp.int32(ids.shape[0]) - near
+
+
+def tiered_lookup_segments(hot, cold_q, cold_scales, tier, slot, ids, seg_of,
+                           n_segments: int, *, interpret: Optional[bool] = None):
+    """Step-wide ragged lookup: one dispatch for any number of segments.
+
+    ``ids`` (N,) is the concatenation of every segment's page ids and
+    ``seg_of`` (N,) assigns each gather to a segment in [0, n_segments).
+    Returns (rows (N, D) f32, seg_hits (n_segments, 2) int32) with
+    seg_hits[:, 0] the near hits and seg_hits[:, 1] the far hits counted
+    inside the kernel. Both results are DEVICE arrays — no host sync —
+    so a caller batching a fixed segment count sees stable shapes and the
+    counters can feed a device-resident accumulator plane.
+    """
+    n_segments = int(n_segments)
+    if ids.shape[0] == 0:
+        return (
+            jnp.zeros((0, hot.shape[1]), jnp.float32),
+            jnp.zeros((n_segments, 2), jnp.int32),
+        )
+    return _tiered_lookup_segments(
+        hot, cold_q, cold_scales, tier, slot, ids, seg_of,
+        n_segments=n_segments, interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "interpret"))
+def _tiered_lookup_segments(hot, cold_q, cold_scales, tier, slot, ids, seg_of,
+                            *, n_segments, interpret):
+    d = hot.shape[1]
+    ids = ids.astype(jnp.int32)
+    t = tier[ids].astype(jnp.int32)
+    s = slot[ids].astype(jnp.int32)
+    hotp, _ = _pad_lanes(_nonempty(hot, hot.dtype))
+    coldp, _ = _pad_lanes(_nonempty(cold_q, jnp.int8))
+    scales = cold_scales.reshape(-1).astype(jnp.float32)
+    if scales.shape[0] == 0:
+        scales = jnp.ones((1,), jnp.float32)
+    rows, seg_hits = tiered_segmented_kernel(
+        hotp,
+        coldp,
+        scales.reshape(-1, 1),
+        t,
+        jnp.where(t == 0, s, 0),
+        jnp.where(t == 1, s, 0),
+        seg_of.astype(jnp.int32),
+        n_segments,
+        interpret=interpret,
+    )
+    return rows[:, :d], seg_hits
 
 
 def tiered_lookup(hot, cold_q, cold_scales, tier, slot, ids,

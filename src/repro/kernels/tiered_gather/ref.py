@@ -48,3 +48,24 @@ def tiered_lookup_counted_ref(hot, cold_q, cold_scales, tier, slot, ids):
 def tiered_lookup_ref(hot, cold_q, cold_scales, tier, slot, ids):
     """Rows-only view of :func:`tiered_lookup_counted_ref`."""
     return tiered_lookup_counted_ref(hot, cold_q, cold_scales, tier, slot, ids)[0]
+
+
+def tiered_lookup_segments_ref(hot, cold_q, cold_scales, tier, slot, ids,
+                               seg_of, n_segments: int):
+    """Segmented-lookup oracle: rows as in :func:`tiered_lookup_ref`, and
+    per-segment (near, far) hit pairs as a (n_segments, 2) int32 table —
+    the counter semantics the ragged device kernel must reproduce
+    bit-exactly. Segments with no gathers count (0, 0).
+    """
+    n_segments = int(n_segments)
+    if ids.shape[0] == 0:
+        return (
+            jnp.zeros((0, hot.shape[1]), jnp.float32),
+            jnp.zeros((n_segments, 2), jnp.int32),
+        )
+    rows = tiered_lookup_ref(hot, cold_q, cold_scales, tier, slot, ids)
+    near = (tier[ids] == 0).astype(jnp.int32)
+    seg = seg_of.astype(jnp.int32)
+    near_seg = jax.ops.segment_sum(near, seg, num_segments=n_segments)
+    far_seg = jax.ops.segment_sum(1 - near, seg, num_segments=n_segments)
+    return rows, jnp.stack([near_seg, far_seg], axis=1).astype(jnp.int32)

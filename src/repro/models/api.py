@@ -283,12 +283,21 @@ def make_prefill_step(api: ModelAPI, max_len: int):
     return prefill_step
 
 
-def make_serve_step(api: ModelAPI, *, sample: str = "greedy"):
-    """(params, cache, tokens (B,1)) -> (next_tokens (B,1), cache')."""
+def make_serve_step(api: ModelAPI, *, sample: str = "greedy",
+                    vocab: Optional[int] = None):
+    """(params, cache, tokens (B,1)) -> (next_tokens (B,1), cache').
+
+    ``vocab`` restricts the argmax to the first ``vocab`` logits — models
+    pad their output head to a lane multiple, and a serving caller must
+    never sample a padding id. The serving engine's jitted decode is this
+    step (with the vocab slice and donated cache), so decode + fused
+    argmax has exactly one implementation.
+    """
 
     def serve_step(params, cache, tokens):
         logits, cache = api.decode(params, cache, tokens)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        v = logits.shape[-1] if vocab is None else vocab
+        nxt = jnp.argmax(logits[:, -1, :v], axis=-1).astype(jnp.int32)[:, None]
         return nxt, cache
 
     return serve_step

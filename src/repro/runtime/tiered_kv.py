@@ -12,11 +12,19 @@ decode math read one flat KV buffer. Here the split is real device state:
   * ``tier`` / ``slot`` — device int32 maps consumed by the fused Pallas
     kernel (kernels/tiered_gather): tier bit selects the store, slot the row.
 
-Reads go through :meth:`lookup` → one fused kernel pass (near gather + far
-gather with dequant + on-device near/far hit counting). Placement pushes go
-through :meth:`migrate` → real data movement: promotions dequantize far
-rows into freed near slots, demotions quantize near rows back into their
-far slots. ``flat`` mirrors every write into the legacy flat f32 buffer;
+Reads go through :meth:`lookup_segments` → ONE fused ragged kernel pass per
+engine step (near gather + far gather with dequant + per-segment near/far
+hit counting), with the counts accumulated into a device-resident counter
+plane (per-slot, per-tenant-index, and total accumulators) instead of
+synced to host ints. :meth:`drain_counters` is the only host sync: it
+materializes and zeroes the plane, and the serving engine calls it once
+per profiler window — the books it charges are bit-identical to charging
+every call, because the plane is a pure sum. :meth:`lookup` keeps the
+legacy per-call signature (counters returned as host ints, one sync per
+call) for direct callers and the dispatch-budget benchmark's baseline.
+Placement pushes go through :meth:`migrate` → real data movement:
+promotions dequantize far rows into freed near slots, demotions quantize
+near rows back into their far slots. ``flat`` mirrors every write into the legacy flat f32 buffer;
 it is the differential-test oracle (and the "flat decode" baseline the
 benchmark times) — with ``identity_scales=True`` rows are snapped to the
 int8 grid at write time, so tiered reads are bit-identical to flat reads
@@ -35,10 +43,36 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.tiered_gather.ops import gather_rows, tiered_lookup_counted
+import functools
+
+import jax
+
+from repro.kernels.tiered_gather.ops import (
+    gather_rows,
+    tiered_lookup_counted,
+    tiered_lookup_segments,
+)
 
 NEAR, FAR = 0, 1
 _QMAX = 127.0
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _plane_add(ctr_slot, ctr_tenant, ctr_total, hits, slot_vec, tenant_vec):
+    """Fold one dispatch's per-segment hit pairs into the counter plane —
+    pure device arithmetic, no host sync. Padded segments carry zero hits,
+    so scatter-adding them anywhere is a no-op."""
+    return (
+        ctr_slot.at[slot_vec].add(hits),
+        ctr_tenant.at[tenant_vec].add(hits),
+        ctr_total + hits.sum(axis=0),
+    )
+
+
+def _bucket(n: int, floor: int = 32) -> int:
+    """Next power-of-two padding bucket: keeps the ragged concat's jitted
+    shapes to O(log N) variants instead of one per distinct step size."""
+    return max(floor, 1 << (int(n) - 1).bit_length())
 
 
 def sanitize_near_ids(near_ids, n_pages: int, capacity: int) -> np.ndarray:
@@ -62,6 +96,7 @@ class TieredKVCache:
         near_dtype=jnp.float32,
         identity_scales: bool = False,
         interpret: Optional[bool] = None,
+        counter_slots: int = 0,
     ):
         assert 0 < near_capacity <= n_pages
         self.n_pages = n_pages
@@ -82,13 +117,26 @@ class TieredKVCache:
         self._maps_dirty = True
         self._tier_dev = None
         self._slot_dev = None
-        # counters
+        # counters (host books: drained totals plus legacy per-call sums)
         self.near_hits = 0
         self.far_hits = 0
         self.lookups = 0
         self.moved_rows = 0
         self.moved_bytes = 0
         self.writes = 0
+        # dispatch/sync budget: kernel launches issued and host round-trips
+        # paid — the two quantities the single-dispatch decode step minimizes
+        self.dispatches = 0
+        self.host_syncs = 0
+        self.drains = 0
+        # device-resident counter plane: (k, 2) int32 accumulators of
+        # (near, far) hit pairs. The slot plane is indexed by engine decode
+        # slot, the tenant plane by a caller-assigned tenant index; both
+        # grow on demand and are only read by drain_counters().
+        self.ctr_slot = jnp.zeros((int(counter_slots), 2), jnp.int32)
+        self.ctr_tenant = jnp.zeros((0, 2), jnp.int32)
+        self.ctr_total = jnp.zeros((2,), jnp.int32)
+        self._plane_dirty = False
 
     # ------------------------------------------------------------------
     @property
@@ -189,7 +237,110 @@ class TieredKVCache:
         self.near_hits += n
         self.far_hits += f
         self.lookups += 1
+        self.dispatches += 1
+        self.host_syncs += 1
         return rows, n, f
+
+    # ------------------------------------------------------------------
+    def ensure_counter_plane(self, n_slots: int, n_tenants: int):
+        """Grow the counter plane to at least (n_slots, n_tenants) rows,
+        preserving any undrained counts."""
+
+        def grow(buf, k):
+            if buf.shape[0] >= k:
+                return buf
+            return jnp.concatenate(
+                [buf, jnp.zeros((k - buf.shape[0], 2), jnp.int32)]
+            )
+
+        self.ctr_slot = grow(self.ctr_slot, int(n_slots))
+        self.ctr_tenant = grow(self.ctr_tenant, int(n_tenants))
+
+    def lookup_segments(self, page_ids, seg_of, n_segments: int,
+                        slot_idx=None, tenant_idx=None):
+        """Step-wide ragged gather: ONE kernel dispatch, ZERO host syncs.
+
+        ``page_ids`` concatenates every segment's pages; ``seg_of`` assigns
+        each gather to a segment in [0, n_segments - 1) — the last segment
+        index is reserved for shape-bucketing padding and its counts are
+        discarded. ``slot_idx``/``tenant_idx`` (one index per real segment)
+        route the per-segment (near, far) hit pairs into the device counter
+        plane, where they accumulate until :meth:`drain_counters`.
+
+        Returns the gathered rows (N, D) f32 — a device array; the hit
+        counters never touch the host here.
+        """
+        ids = np.asarray(page_ids, np.int64).reshape(-1)
+        seg = np.asarray(seg_of, np.int32).reshape(-1)
+        assert seg.size == ids.size
+        n_segments = int(n_segments)
+        # the last segment is the padding sink: real gathers assigned there
+        # would be silently dropped from the books, so fail loudly instead
+        assert int(seg.max(initial=-1)) < n_segments - 1, (
+            f"seg_of uses segment {int(seg.max(initial=-1))} but n_segments="
+            f"{n_segments} reserves the last index for padding"
+        )
+        if ids.size == 0:
+            return jnp.zeros((0, self.row_dim), jnp.float32)
+        # pad the ragged concat to a power-of-two bucket; padding gathers
+        # page 0 into the sacrificial last segment, whose counts are dropped
+        pad = _bucket(ids.size) - ids.size
+        if pad:
+            ids = np.concatenate([ids, np.zeros(pad, np.int64)])
+            seg = np.concatenate([seg, np.full(pad, n_segments - 1, np.int32)])
+        tier, slot = self._device_maps()
+        rows, seg_hits = tiered_lookup_segments(
+            self.near, self.far_q, self.far_scale, tier, slot,
+            jnp.asarray(ids, jnp.int32), jnp.asarray(seg), n_segments,
+            interpret=self.interpret,
+        )
+        live = seg_hits[: n_segments - 1]
+        k = live.shape[0]
+        slot_vec = np.zeros(k, np.int32)
+        tenant_vec = np.zeros(k, np.int32)
+        if slot_idx is not None:
+            slot_vec[: len(slot_idx)] = np.asarray(slot_idx, np.int32)
+        if tenant_idx is not None:
+            tenant_vec[: len(tenant_idx)] = np.asarray(tenant_idx, np.int32)
+        self.ensure_counter_plane(int(slot_vec.max(initial=-1)) + 1,
+                                  int(tenant_vec.max(initial=-1)) + 1)
+        self.ctr_slot, self.ctr_tenant, self.ctr_total = _plane_add(
+            self.ctr_slot, self.ctr_tenant, self.ctr_total,
+            live, jnp.asarray(slot_vec), jnp.asarray(tenant_vec),
+        )
+        self._plane_dirty = True
+        self.lookups += 1
+        self.dispatches += 1
+        return rows[: ids.size - pad] if pad else rows
+
+    def drain_counters(self) -> dict:
+        """The ONE host sync of the counter plane: materialize the per-slot
+        / per-tenant / total accumulators, zero them, and fold the totals
+        into the host hit books. Draining every step or once per window
+        charges identical books — the plane is a pure sum — which is the
+        invariant the drain-equivalence test pins.
+        """
+        if not self._plane_dirty:
+            return {
+                "near": 0,
+                "far": 0,
+                "slot": np.zeros((self.ctr_slot.shape[0], 2), np.int64),
+                "tenant": np.zeros((self.ctr_tenant.shape[0], 2), np.int64),
+            }
+        slot_c, tenant_c, total = (
+            np.asarray(x, np.int64)
+            for x in jax.device_get((self.ctr_slot, self.ctr_tenant, self.ctr_total))
+        )
+        self.ctr_slot = jnp.zeros_like(self.ctr_slot)
+        self.ctr_tenant = jnp.zeros_like(self.ctr_tenant)
+        self.ctr_total = jnp.zeros_like(self.ctr_total)
+        self._plane_dirty = False
+        n, f = int(total[0]), int(total[1])
+        self.near_hits += n
+        self.far_hits += f
+        self.host_syncs += 1
+        self.drains += 1
+        return {"near": n, "far": f, "slot": slot_c, "tenant": tenant_c}
 
     def lookup_flat(self, page_ids):
         """The legacy flat-buffer gather (baseline + differential oracle)."""
@@ -267,6 +418,9 @@ class TieredKVCache:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        """Host-book snapshot. ``near_hits``/``far_hits`` report DRAINED
+        counts only — callers owning undrained segmented lookups (the
+        serving engine) drain before reading."""
         tot = self.near_hits + self.far_hits
         return {
             "near_count": self.near_count,
@@ -278,4 +432,7 @@ class TieredKVCache:
             "writes": self.writes,
             "moved_rows": self.moved_rows,
             "moved_bytes": self.moved_bytes,
+            "dispatches": self.dispatches,
+            "host_syncs": self.host_syncs,
+            "drains": self.drains,
         }

@@ -9,6 +9,7 @@ deterministically under a fixed seed.
 import dataclasses
 import pathlib
 import sys
+from collections import deque
 
 import numpy as np
 import pytest
@@ -87,10 +88,10 @@ def _fleet(**kw):
 def test_weighted_fair_dispatch_order():
     fleet = _fleet(tenant_weights={"web": 3.0, "cache": 1.0})
     for i in range(4):
-        fleet.tenant_queues.setdefault("web", []).append(
+        fleet.tenant_queues.setdefault("web", deque()).append(
             Request(i, np.zeros(4, np.int32), 2, -1, 0.0, "web")
         )
-        fleet.tenant_queues.setdefault("cache", []).append(
+        fleet.tenant_queues.setdefault("cache", deque()).append(
             Request(10 + i, np.zeros(4, np.int32), 2, -1, 0.0, "cache")
         )
     assert fleet.dispatch(4) == 4
@@ -105,10 +106,10 @@ def test_weighted_fair_dispatch_order():
 def test_equal_weights_alternate():
     fleet = _fleet()
     for i in range(3):
-        fleet.tenant_queues.setdefault("a", []).append(
+        fleet.tenant_queues.setdefault("a", deque()).append(
             Request(i, np.zeros(4, np.int32), 2, -1, 0.0, "a")
         )
-        fleet.tenant_queues.setdefault("b", []).append(
+        fleet.tenant_queues.setdefault("b", deque()).append(
             Request(10 + i, np.zeros(4, np.int32), 2, -1, 0.0, "b")
         )
     fleet.dispatch(4)

@@ -31,11 +31,17 @@ from repro.configs import get_config
 from repro.configs.workloads import get_profile
 from repro.data.requests import RequestGenerator
 from repro.fleet import build_fleet, export_all, fleet_vocab, validate_fleet
-from repro.kernels.tiered_gather.ops import gather_rows, tiered_lookup, tiered_lookup_counted
+from repro.kernels.tiered_gather.ops import (
+    gather_rows,
+    tiered_lookup,
+    tiered_lookup_counted,
+    tiered_lookup_segments,
+)
 from repro.kernels.tiered_gather.ref import (
     gather_rows_ref,
     tiered_lookup_counted_ref,
     tiered_lookup_ref,
+    tiered_lookup_segments_ref,
 )
 from repro.models.api import get_model
 from repro.runtime.serving import EngineConfig, ServingEngine
@@ -132,6 +138,51 @@ def test_counted_lookup_empty_ids():
         hot, cold_q, scales, tier, slot, jnp.zeros((0,), jnp.int32)
     )
     assert rows.shape == (0, 64) and int(near) == 0 and int(far) == 0
+
+
+def _assert_segmented_matches(hot, cold_q, scales, tier, slot, ids, seg_of, n_seg):
+    rows, hits = tiered_lookup_segments(hot, cold_q, scales, tier, slot, ids, seg_of, n_seg)
+    r_rows, r_hits = tiered_lookup_segments_ref(
+        hot, cold_q, scales, tier, slot, ids, seg_of, n_seg
+    )
+    np.testing.assert_allclose(np.asarray(rows), np.asarray(r_rows), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(hits), np.asarray(r_hits))
+    # per-segment counts must sum to the single-segment counted lookup —
+    # segmentation refines the counters, it never changes the totals
+    _, near, far = tiered_lookup_counted(hot, cold_q, scales, tier, slot, ids)
+    assert int(np.asarray(hits)[:, 0].sum()) == int(near)
+    assert int(np.asarray(hits)[:, 1].sum()) == int(far)
+
+
+@given(
+    st.integers(0, 12),      # near rows
+    st.integers(1, 24),      # far rows
+    st.integers(1, 40),      # total gather width across segments
+    st.integers(1, 6),       # segments actually populated
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_segmented_lookup_matches_ref_property(mh, mc, n, n_seg, seed):
+    rng = np.random.default_rng(seed)
+    hot, cold_q, scales, tier, slot, ids = _tier_setup(rng, mh, mc, 64, n)
+    # unsorted segment assignment: the kernel must not assume contiguity
+    seg_of = jnp.asarray(rng.integers(0, n_seg, size=n), jnp.int32)
+    # n_seg + 2 leaves trailing segments empty — they must count (0, 0)
+    _assert_segmented_matches(hot, cold_q, scales, tier, slot, ids, seg_of, n_seg + 2)
+
+
+def test_segmented_lookup_empty_ids_and_duplicates():
+    rng = np.random.default_rng(9)
+    hot, cold_q, scales, tier, slot, _ = _tier_setup(rng, 4, 4, 64, 1)
+    rows, hits = tiered_lookup_segments(
+        hot, cold_q, scales, tier, slot,
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32), 3,
+    )
+    assert rows.shape == (0, 64)
+    np.testing.assert_array_equal(np.asarray(hits), np.zeros((3, 2), np.int32))
+    ids = jnp.asarray([0, 0, 7, 7, 7, 3, 0], jnp.int32)
+    seg_of = jnp.asarray([0, 1, 1, 0, 2, 2, 2], jnp.int32)
+    _assert_segmented_matches(hot, cold_q, scales, tier, slot, ids, seg_of, 3)
 
 
 def test_rows_only_wrappers_agree():
