@@ -44,9 +44,26 @@ plan, and drained hosts fold their MemProf profile into the aggregate
 before retiring. The straggler/autoscale demo below shows both;
 benchmarks/straggler_bench.py is the quantitative study.
 
-PYTHONPATH=src python examples/serve_fleet.py
+Flight recorder (repro.obs)
+---------------------------
+Pass ``build_fleet(recorder=FlightRecorder())`` (or set
+``REPRO_FLIGHT_RECORDER=1``) and the fleet records its whole story on the
+scheduler's virtual clock: every request's lifecycle as spans (``admit`` →
+``queue`` → ``dispatch`` → ``prefill`` → ``decode`` → ``complete``, or
+``shed`` at the door), host-level ``step``/``migrate`` spans, scale events
+as instants, and every stats counter as a typed metric with tenant/replica
+labels (merged fleet-wide via ``router.fleet_metrics()``, bit-identical to
+``fleet_stats``). ``recorder.write(path)`` exports Perfetto/Chrome
+trace-event JSON — open it at https://ui.perfetto.dev; requests group into
+per-tenant process swimlanes, hosts into ``host:<rid>`` tracks — plus a
+``.metrics.jsonl`` timeline of registry snapshots per profiler window.
+The autoscale demo below records itself and validates the export schema
+(balanced B/E pairs, monotone virtual time, labels on every event).
+
+PYTHONPATH=src python examples/serve_fleet.py [--trace out.json]
 """
 import dataclasses
+import sys
 
 from repro.configs.workloads import get_profile
 from repro.data.requests import RequestGenerator, interleave
@@ -59,6 +76,7 @@ from repro.fleet import (
     fleet_vocab,
     validate_fleet,
 )
+from repro.obs import FlightRecorder
 
 N_REPLICAS = 4
 N_PAGES = 512
@@ -132,8 +150,13 @@ def serve_multi_tenant(n_requests: int = 24):
     return stats
 
 
-def serve_straggler_autoscale():
-    """Host 3 runs 4x slow; a burst then scales an elastic fleet up/down."""
+def serve_straggler_autoscale(trace_path=None):
+    """Host 3 runs 4x slow; a burst then scales an elastic fleet up/down.
+
+    The autoscale scenario runs with the flight recorder attached and
+    exports (optionally to ``trace_path``) a Perfetto-loadable trace of the
+    whole scale cycle — queue/decode spans per request, migrate spans from
+    the warm handoff, scale instants on the fleet track."""
     prof = dataclasses.replace(
         get_profile("Web1"), prompt_mean=24, decode_mean=6, prefix_share=0.9, n_prefixes=3
     )
@@ -158,13 +181,16 @@ def serve_straggler_autoscale():
     print(f"  4x straggler: event-driven wins {tput['event'] / tput['lockstep']:.2f}x "
           f"(the barrier pays max(step_cost) every fleet step)")
 
-    # autoscale: a 6 req/tick burst on 2 replicas, then drain + retire
+    # autoscale: a 6 req/tick burst on 2 replicas, then drain + retire —
+    # recorded end to end by the flight recorder
+    recorder = FlightRecorder()
     fleet = build_fleet(
         2, policy="least-loaded", n_pages=N_PAGES, trace_window=16, trace_period=32,
         admission=AdmissionController(SLOModel(max_delay_steps=16.0)),
         autotier=dict(near_frac=0.30, epoch_steps=4),
         elastic=dict(min_replicas=2, max_replicas=5, cooldown=3.0,
                      up_shed_rate=0.05, up_backlog_frac=0.6, down_backlog_frac=0.15),
+        recorder=recorder,
     )
     gen = RequestGenerator(prof, vocab_size=fleet_vocab(), seed=0)
     stats = fleet.run(gen, n_requests=60, max_steps=400, submit_per_step=6)
@@ -176,10 +202,17 @@ def serve_straggler_autoscale():
     print(f"  stitched trace across the scale cycle (incl. retired hosts): "
           f"hit-ratio err {val['hit_ratio_error']*100:.2f}%, "
           f"R:W err {val['rw_ratio_error_pct']:+.2f}%")
+    if trace_path is not None:
+        summary = recorder.write(trace_path)
+    else:
+        summary = recorder.validate()
+    print(f"  flight recorder: {summary['spans']} spans / {summary['instants']} "
+          f"instants on {summary['tracks']} tracks, schema valid"
+          + (f" -> {trace_path}" if trace_path else ""))
     return stats, val
 
 
-def main():
+def main(trace_path=None):
     rr, _ = serve("round-robin")
     print()
     aff, val = serve("prefix-affinity")
@@ -191,11 +224,14 @@ def main():
     mt = serve_multi_tenant()
     assert set(mt["tenants"]) == {"web", "cache"}, mt["tenants"]
     print()
-    sa, sval = serve_straggler_autoscale()
+    sa, sval = serve_straggler_autoscale(trace_path)
     assert any(e[1] == "up" for e in sa["scale_events"]), sa["scale_events"]
     assert sval["hit_ratio_error"] <= 0.05 and abs(sval["rw_ratio_error_pct"]) <= 5.0, sval
     print("serve_fleet ok")
 
 
 if __name__ == "__main__":
-    main()
+    path = None
+    if "--trace" in sys.argv:
+        path = sys.argv[sys.argv.index("--trace") + 1]
+    main(path)

@@ -43,6 +43,7 @@ import jax
 from repro.fleet.admission import AdmissionController, SLOModel
 from repro.fleet.aggregator import (
     aggregate_counts,
+    aggregate_metrics,
     aggregate_tenant_counts,
     export_all,
     fleet_report,
@@ -81,6 +82,7 @@ __all__ = [
     "VirtualScheduler",
     "simulated_throughput",
     "aggregate_counts",
+    "aggregate_metrics",
     "aggregate_tenant_counts",
     "export_all",
     "fleet_report",
@@ -104,6 +106,7 @@ def build_fleet(
     seed: int = 0,
     tenant_weights: Optional[dict] = None,
     speeds: Optional[Sequence[float]] = None,
+    recorder=None,
     **engine_kwargs,
 ) -> FleetRouter:
     """Construct N replicas sharing one model (params + jitted decode),
@@ -121,6 +124,12 @@ def build_fleet(
     ``tenant_weights`` sets the router's weighted-fair dispatch shares for
     multi-tenant traffic (see fleet/router.py); per-tenant SLOs live on the
     AdmissionController (``tenant_slos``).
+
+    ``recorder`` attaches an ``obs.FlightRecorder`` (request-lifecycle
+    spans + unified metrics, exportable to Perfetto): every replica —
+    including elastically added ones — emits through it on the fleet's
+    virtual clock. Defaults to the process-global recorder, if one is
+    installed (``obs.set_default_recorder`` / ``REPRO_FLIGHT_RECORDER=1``).
     """
     from repro.configs import get_config
     from repro.models.api import get_model
@@ -152,6 +161,8 @@ def build_fleet(
     router = FleetRouter(
         replicas, POLICIES[policy](), admission=admission, tenant_weights=tenant_weights
     )
+    if recorder is not None:
+        router.attach_recorder(recorder)
     if autotier is not None:
         router.autotierer = AutoTierer(replicas, **autotier)
         router.on_step.append(router.autotierer)

@@ -23,6 +23,7 @@ from collections import deque
 from typing import Dict, List, Optional
 
 from repro.data.requests import Request
+from repro.obs import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -53,6 +54,9 @@ class AdmissionController:
         self.admitted = 0
         self.offered_by: Dict[str, int] = {}
         self.admitted_by: Dict[str, int] = {}
+        # door books on the unified metrics plane (same ints as the dicts
+        # above; the router folds this registry into the fleet merge)
+        self.metrics = MetricsRegistry()
         # sliding window of recent admit/shed decisions, exported via
         # ``pressure()`` for observability. Note it only decays as NEW
         # offers arrive — the elastic fleet's scale decisions therefore use
@@ -132,6 +136,7 @@ class AdmissionController:
         tenant = getattr(req, "tenant", "default")
         self.offered += 1
         self.offered_by[tenant] = self.offered_by.get(tenant, 0) + 1
+        self.metrics.counter("offered", tenant=tenant).inc()
         rate = self.fleet_rate(replicas)
         if rate <= 0:
             # no replicas / no decode slots: nothing can ever be served, so
@@ -149,5 +154,6 @@ class AdmissionController:
             return False
         self.admitted += 1
         self.admitted_by[tenant] = self.admitted_by.get(tenant, 0) + 1
+        self.metrics.counter("door_admitted", tenant=tenant).inc()
         self._recent.append(True)
         return True

@@ -23,10 +23,22 @@ import numpy as np
 from repro.core import distribution
 from repro.core.memtrace import TraceWindow, validate_trace
 from repro.fleet.replica import Replica, ReplicaProfile
+from repro.obs import MetricSnapshot, merge_snapshots
 
 
 def export_all(replicas: List[Replica]) -> List[ReplicaProfile]:
     return [r.export_profile() for r in replicas]
+
+
+def aggregate_metrics(profiles: List[ReplicaProfile]) -> MetricSnapshot:
+    """Fleet metrics merge over exported profiles — same path as the
+    hotness histogram: per-host state is only representative aggregated.
+
+    Counters sum exactly (ints), histograms add bucket-wise, so the merged
+    totals equal the legacy ``fleet_stats`` sums bit-for-bit while keeping
+    tenant/replica label dimensions the legacy dicts flatten away.
+    """
+    return merge_snapshots([p.metrics for p in profiles if p.metrics is not None])
 
 
 def aggregate_counts(profiles: List[ReplicaProfile]) -> np.ndarray:

@@ -98,6 +98,21 @@ class ElasticFleet:
         self._prev_offered = 0
         self._prev_shed = 0
 
+    def _record_event(self, ev: ScaleEvent):
+        """Every scale event is a fleet-track instant + a labeled counter."""
+        self.events.append(ev)
+        self.router.metrics.counter("scale_events", action=ev.action).inc()
+        rec = self.router.recorder
+        if rec is not None:
+            rec.instant(
+                f"scale_{ev.action}",
+                -1,
+                ev.vtime,
+                n_active=ev.n_active,
+                rid=ev.rid,
+                reason=ev.reason,
+            )
+
     # ------------------------------------------------------------------
     # pressure signals
 
@@ -151,13 +166,17 @@ class ElasticFleet:
         self._next_rid += 1
         r.clock = now
         r.created_at = now  # stitched windows key off the join time
+        # a joining host reports through the fleet's clock and recorder
+        # from its first step (before the warm placement push, which emits
+        # a migrate span of its own)
+        self.router._attach_engine(r)
         warm = self.autotierer.warm_near_ids() if self.autotierer is not None else None
         if warm is not None:
             # the fleet plan is the service's hotness, valid on any host
             r.apply_placement(warm)
         self.router.replicas.append(r)
         self._last_decision = now
-        self.events.append(
+        self._record_event(
             ScaleEvent(now, "up", r.rid, len(self.router.active_replicas), reason)
         )
         return r
@@ -170,7 +189,7 @@ class ElasticFleet:
         victim = max(active, key=lambda r: r.rid)
         victim.start_drain()
         self._last_decision = now
-        self.events.append(
+        self._record_event(
             ScaleEvent(now, "drain", victim.rid, len(self.router.active_replicas), reason)
         )
         return victim
@@ -190,6 +209,6 @@ class ElasticFleet:
             st["placement_far_hits"] = r.engine.placement.stats.far_hits
             self.retired_stats.append(st)
             self.router.replicas.remove(r)
-            self.events.append(
+            self._record_event(
                 ScaleEvent(now, "retire", r.rid, len(self.router.active_replicas))
             )

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.memtrace import CacheSim, TraceWindow
 from repro.data.requests import Request
+from repro.obs import MetricSnapshot
 from repro.runtime.serving import EngineConfig, ServingEngine
 
 
@@ -53,6 +54,10 @@ class ReplicaProfile:
     # plane — plus the dispatch/host-sync budget and bytes actually moved
     # by placement pushes); None for hosts on the host-accounted path
     device_tiering: Optional[dict] = None
+    # frozen metrics-registry state at export (replica label applied): what
+    # a retired host contributes to the fleet metrics merge after its live
+    # registry is gone
+    metrics: Optional[MetricSnapshot] = None
 
     @property
     def n_pages(self) -> int:
@@ -91,6 +96,11 @@ class Replica:
         self.draining = False
         self.steps_done = 0
         engine.access_hooks.append(self._on_access)
+        # flight-recorder identity: span tracks and metric series from this
+        # host carry its rid (const label, applied at snapshot time so the
+        # engine's pre-existing instruments are covered too)
+        engine.host_rid = rid
+        engine.metrics.const_labels.setdefault("replica", str(rid))
 
     def _on_access(self, pages: np.ndarray, is_write: bool):
         for p in np.asarray(pages).reshape(-1):
@@ -151,7 +161,8 @@ class Replica:
             for name in eng.profiler.streams("kv.")
         }
         tenant_near = {
-            t: ts["near_hits"] / max(ts["near_hits"] + ts["far_hits"], 1)
+            t: ts["near_hits"].value
+            / max(ts["near_hits"].value + ts["far_hits"].value, 1)
             for t, ts in eng.tenant_stats.items()
         }
         return ReplicaProfile(
@@ -169,6 +180,7 @@ class Replica:
             step_cost=self.step_cost,
             clock_offset=self.created_at,
             device_tiering=None if eng.tiered is None else eng.tiered.stats(),
+            metrics=eng.metrics.snapshot(),
         )
 
     @property

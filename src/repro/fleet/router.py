@@ -41,6 +41,12 @@ from repro.env import env_flag
 from repro.fleet.admission import AdmissionController, SLOModel
 from repro.fleet.replica import Replica, ReplicaProfile
 from repro.fleet.scheduler import ARRIVAL, VirtualScheduler
+from repro.obs import (
+    MetricSnapshot,
+    MetricsRegistry,
+    default_recorder,
+    merge_snapshots,
+)
 
 FAR_LATENCY_REL = TPU_TIERED[1].latency_rel  # host-DRAM far tier vs HBM
 
@@ -156,6 +162,38 @@ class FleetRouter:
         self.mode = "idle"
         self.elastic = None  # ElasticFleet, attached by build_fleet
         self.autotierer = None  # AutoTierer, attached by build_fleet
+        # unified metrics plane: the router's registry carries the fleet-
+        # scoped series (routed/shed counters, queue-wait histograms); the
+        # fleet metric view is merge_snapshots over this + every replica
+        # engine registry + retired profiles (metric_snapshots below)
+        self.metrics = MetricsRegistry()
+        self.recorder = None  # FlightRecorder, via attach_recorder
+        if default_recorder() is not None:
+            self.attach_recorder(default_recorder())
+
+    # ------------------------------------------------------------------
+    # flight recorder
+
+    def attach_recorder(self, rec):
+        """Wire a FlightRecorder into the fleet: it reads this router's
+        virtual clock, snapshots on every completion batch, and every
+        replica's engine (present and future — see ElasticFleet.scale_up)
+        emits spans/metrics through it."""
+        self.recorder = rec
+        rec.now_fn = lambda: self._now
+        rec.register(self.metrics)
+        for r in self.replicas:
+            self._attach_engine(r)
+        if rec.on_step not in self.on_step:
+            self.on_step.append(rec.on_step)
+
+    def _attach_engine(self, replica: Replica):
+        """Point one replica's engine at the fleet clock + recorder."""
+        eng = replica.engine
+        eng.now_fn = lambda: self._now
+        if self.recorder is not None:
+            eng.recorder = self.recorder
+            self.recorder.register(eng.metrics)
 
     # ------------------------------------------------------------------
     # tenant bookkeeping
@@ -197,9 +235,16 @@ class FleetRouter:
         ):
             self.shed += 1
             self.shed_by[tenant] = self.shed_by.get(tenant, 0) + 1
+            self.metrics.counter("shed", tenant=tenant).inc()
+            if self.recorder is not None:
+                self.recorder.instant("shed", req.rid, self._now, tenant=tenant)
             return False
         self.tenant_queues.setdefault(tenant, deque()).append(req)
         self._enqueue_time[id(req)] = self._now
+        self.metrics.counter("admitted", tenant=tenant).inc()
+        if self.recorder is not None:
+            self.recorder.instant("admit", req.rid, self._now, tenant=tenant)
+            self.recorder.begin("queue", req.rid, self._now, tenant=tenant)
         return True
 
     def _pick_tenant(self) -> Optional[str]:
@@ -220,11 +265,19 @@ class FleetRouter:
             if tenant is None:
                 break
             req = self.tenant_queues[tenant].popleft()
-            targets[self.policy.choose(req, targets)].submit(req)
+            chosen = targets[self.policy.choose(req, targets)]
+            chosen.submit(req)
             wait = self._now - self._enqueue_time.pop(id(req), self._now)
             self.wait_samples.setdefault(tenant, []).append(wait)
+            self.metrics.histogram("queue_wait", tenant=tenant).record(wait)
             self.routed += 1
             self.routed_by[tenant] = self.routed_by.get(tenant, 0) + 1
+            self.metrics.counter("routed", tenant=tenant).inc()
+            if self.recorder is not None:
+                self.recorder.end("queue", req.rid, self._now, wait=wait)
+                self.recorder.instant(
+                    "dispatch", req.rid, self._now, tenant=tenant, replica=chosen.rid
+                )
             # virtual time advances by inverse weight: a weight-2 tenant is
             # picked twice as often as a weight-1 tenant under contention
             self._vtime[tenant] = self._vtime.get(tenant, 0.0) + 1.0 / self._weight(tenant)
@@ -349,6 +402,10 @@ class FleetRouter:
             sched.post(sched.now, arrive, prio=ARRIVAL)
 
         sched.run(until=horizon, quiescent=quiescent)
+        # scheduler activity enters the registry once per run (pure sums,
+        # so cadence-independent like every other mirrored series)
+        self.metrics.counter("sched_events").inc(sched.events_run)
+        self.metrics.counter("sched_batches").inc(sched.batches)
         # a horizon-truncated run leaves completion events unexecuted in
         # the discarded scheduler; those steps never happened (no engine
         # mutation), so clear the in-flight markers or the replicas would
@@ -368,12 +425,18 @@ class FleetRouter:
             if r.busy or r.load <= 0:
                 continue
             r.busy = True
+            t_begin = sched.now
 
-            def complete(r=r):
+            def complete(r=r, t_begin=t_begin):
                 self._now = sched.now
                 r.busy = False
                 r.clock = sched.now
-                r.step()
+                decoded = r.step()
+                rec = self.recorder
+                if rec is not None and rec.step_spans:
+                    rec.span(
+                        "step", -1, t_begin, sched.now, replica=r.rid, decoded=decoded
+                    )
 
             sched.post(sched.now + r.step_cost, complete)
 
@@ -448,10 +511,39 @@ class FleetRouter:
             o["shed"] = self.shed_by.get(t, 0)
             o["shed_rate"] = o["shed"] / max(o["routed"] + o["shed"], 1)
             o["queued"] = self.queued(t)
-            waits = self.wait_samples.get(t, [])
-            o["wait_p50"] = float(np.percentile(waits, 50)) if waits else 0.0
-            o["wait_p99"] = float(np.percentile(waits, 99)) if waits else 0.0
+            # queue-wait percentiles come from the mergeable exponential
+            # histogram (deterministic bucket upper bounds, ~9% relative
+            # error at the default growth) — NOT np.percentile over the raw
+            # sample list, which cannot merge across routers/windows.
+            # wait_samples keeps the raw list for exact-replay comparisons.
+            h = self.metrics.histogram("queue_wait", tenant=t)
+            o["wait_p50"] = h.quantile(0.50)
+            o["wait_p99"] = h.quantile(0.99)
         return out
+
+    # ------------------------------------------------------------------
+    # unified metrics plane (fleet view)
+
+    def metric_snapshots(self) -> List[MetricSnapshot]:
+        """Every registry's frozen state: router + live replicas + retired
+        hosts (whose snapshots ride in their exported profiles)."""
+        for r in self.replicas:
+            r.engine.drain_tier_counters()  # snapshot at a drain boundary
+        snaps = [self.metrics.snapshot()]
+        if self.admission is not None:
+            snaps.append(self.admission.metrics.snapshot())
+        snaps += [r.engine.metrics.snapshot() for r in self.replicas]
+        if self.elastic is not None:
+            snaps += [
+                p.metrics for p in self.elastic.retired_profiles if p.metrics is not None
+            ]
+        return snaps
+
+    def fleet_metrics(self) -> MetricSnapshot:
+        """Exact fleet merge of every per-host registry — same totals as
+        ``fleet_stats`` bit-for-bit (counters are plain int sums), plus the
+        label dimensions and histograms the legacy dicts never had."""
+        return merge_snapshots(self.metric_snapshots())
 
 
 def simulated_throughput(stats: dict) -> float:

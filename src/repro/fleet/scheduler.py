@@ -56,6 +56,7 @@ class VirtualScheduler:
         self._seq = itertools.count()
         self.now = 0.0
         self.events_run = 0
+        self.batches = 0  # quiescent batches (same-timestamp event groups)
 
     def post(self, time: float, action: Callable[[], None], prio: int = COMPLETION):
         if time < self.now:
@@ -82,6 +83,7 @@ class VirtualScheduler:
                 if self.events_run > max_events:
                     raise RuntimeError("VirtualScheduler runaway: max_events exceeded")
                 ev.action()
+            self.batches += 1
             if quiescent is not None:
                 quiescent(t)
         return self.now

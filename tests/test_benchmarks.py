@@ -35,3 +35,51 @@ def test_registered_benchmark_importable_and_callable(name):
 
 def test_selector_rejects_unknown_benchmark():
     assert bench_run.main(["no-such-benchmark"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# --trace flag (fleet flight recorder export)
+
+
+def test_trace_flag_round_trips():
+    path, rest = bench_run.parse_trace_flag(["--trace", "out.json", "table5"])
+    assert (path, rest) == ("out.json", ["table5"])
+    path, rest = bench_run.parse_trace_flag(["table5"])
+    assert (path, rest) == (None, ["table5"])
+    # the flag composes with the selector in either order
+    path, rest = bench_run.parse_trace_flag(["fleet", "--trace", "t.json"])
+    assert (path, rest) == ("t.json", ["fleet"])
+    with pytest.raises(SystemExit):
+        bench_run.parse_trace_flag(["--trace"])
+
+
+def test_trace_flag_writes_export(tmp_path, monkeypatch):
+    """main() with --trace installs a recorder and writes the trace +
+    metrics files on exit (exercised against a stub benchmark so the smoke
+    stays cheap)."""
+    import types
+
+    from repro.obs import default_recorder, set_default_recorder
+
+    stub = types.ModuleType("stub_bench")
+
+    def stub_main():
+        rec = default_recorder()
+        assert rec is not None, "--trace must install the global recorder"
+        rec.instant("tick", 1, 0.5, tenant="t")
+        return {"ok": True}
+
+    stub.main = stub_main
+    monkeypatch.setitem(sys.modules, "stub_bench", stub)
+    monkeypatch.setattr(bench_run, "MODULES", ["stub_bench"])
+    out = tmp_path / "trace.json"
+    try:
+        assert bench_run.main(["stub_bench", "--trace", str(out)]) == 0
+    finally:
+        set_default_recorder(None)
+    assert out.is_file()
+    assert (tmp_path / "trace.json.metrics.jsonl").is_file()
+    import json
+
+    events = json.loads(out.read_text())["traceEvents"]
+    assert any(e.get("ph") == "i" and e["name"] == "tick" for e in events)
