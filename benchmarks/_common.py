@@ -40,6 +40,28 @@ def stream_for(name, n=20_000, n_blocks=4096, seed=0):
     return gen.block_stream(n, n_blocks=n_blocks), prof
 
 
+def template_stream_for(name, n=16_000, n_blocks=4096, seed=0, phases=1, **tkw):
+    """Stream-tagged template-walk stream (blocks, lanes, profile) — the
+    paged-KV access shape the trace-driven prefetcher is scored on."""
+    prof = get_profile(name)
+    gen = RequestGenerator(prof, vocab_size=1024, seed=seed)
+    blocks, lanes = gen.template_stream(n, n_blocks=n_blocks, phases=phases, **tkw)
+    return blocks, lanes, prof
+
+
+def score_prefetcher(blocks, lanes, predictor, table=None, buffer_blocks=256, degree=1):
+    """Replay a stream-tagged block stream through a PrefetchEngine and
+    return FINALIZED stats (resident-but-unused charged as waste)."""
+    from repro.core.prefetch import PrefetchEngine
+
+    eng = PrefetchEngine(predictor=predictor, buffer_blocks=buffer_blocks, degree=degree)
+    if table:
+        eng.load_successors(table)
+    for b, l in zip(blocks.tolist(), lanes.tolist()):
+        eng.access(b, is_far=True, stream=l)
+    return eng.finalized_stats()
+
+
 def fmt_table(rows, headers):
     w = [max(len(str(r[i])) for r in rows + [headers]) for i in range(len(headers))]
     out = ["  ".join(str(h).ljust(w[i]) for i, h in enumerate(headers))]

@@ -1,15 +1,63 @@
-"""Paper Fig. 22: L2 prefetcher accuracy/coverage per workload.
+"""Paper Fig. 22: prefetcher accuracy/coverage per workload — and the fix.
 
-The paper's finding — high accuracy (>75%) but LOW coverage (<50%) on
-irregular cloud workloads, near-perfect on predictable streams (Ads1 /
-CPU inference) — reproduced with the software far-tier prefetcher on each
-workload profile's block stream.
+Part 1 reproduces the paper's finding with the hardware-style software
+prefetcher on each workload profile's block stream: high accuracy (>75%)
+but LOW coverage (<50%) on irregular cloud workloads, near-perfect on
+predictable streams (Ads1 / CPU inference).
+
+Part 2 is the paper's §6 payoff measured: on template-walk streams (hot
+prompt templates whose page chains are SCATTERED in the id space — the
+paged-KV reality), a successor table trained on stream-tagged trace
+windows from a disjoint training segment beats both hardware-style
+baselines on coverage while wasting no more bandwidth. All stats are
+FINALIZED: blocks resident-but-unused at the end of the run are charged
+as waste, so accuracy is not inflated by run-end residency.
+
+Self-checks (the PR's acceptance bar) assert the trace predictor's
+coverage strictly beats nextline and markov on every workload at
+equal-or-lower bandwidth overhead.
 """
 import numpy as np
 
-from repro.core.prefetch import PrefetchEngine
+from repro.core.memtrace import TraceWindow
+from repro.core.prefetch import PrefetchEngine, train_successors
 
-from _common import ALL_WORKLOADS, fmt_table, stream_for
+from _common import (
+    ALL_WORKLOADS,
+    fmt_table,
+    score_prefetcher,
+    stream_for,
+    template_stream_for,
+)
+
+BW_EPS = 0.02  # slack on the bandwidth-overhead comparison (tail effects)
+
+
+def _trained_table(blocks, lanes):
+    w = TraceWindow(0, blocks, np.zeros(blocks.size, bool), lanes)
+    return train_successors([w])
+
+
+def template_comparison(workloads=("Web1", "Ads1", "Cache1", "Feed", "Reader"), n=24_000):
+    """Train on the leading 3/4 of each template stream (the fleet's
+    accumulated trace history), score every predictor on the trailing 1/4
+    (markov/nextline train online during evaluation, exactly like the
+    hardware they model). The wide template set means an online table
+    keeps paying its two-sightings-per-transition cold start on the tail
+    templates inside the scoring window, while trained successors cover
+    a chain's first evaluation appearance — the fleet-history advantage.
+    """
+    out = {}
+    for name in workloads:
+        blocks, lanes, _ = template_stream_for(name, n=n, n_templates=48)
+        split = 3 * n // 4
+        table = _trained_table(blocks[:split], lanes[:split])
+        ev_b, ev_l = blocks[split:], lanes[split:]
+        out[name] = {
+            p: score_prefetcher(ev_b, ev_l, p) for p in ("nextline", "markov")
+        }
+        out[name]["trace"] = score_prefetcher(ev_b, ev_l, "trace", table=table)
+    return out
 
 
 def main(predictor="nextline"):
@@ -20,18 +68,44 @@ def main(predictor="nextline"):
         eng = PrefetchEngine(predictor=predictor, buffer_blocks=256, degree=1)
         for b in stream:
             eng.access(int(b), is_far=True)
-        s = eng.stats
+        s = eng.finalized_stats()
         rows.append((name, f"{s.accuracy*100:5.1f}%", f"{s.coverage*100:5.1f}%", f"{s.bw_overhead*100:5.1f}%"))
         out[name] = (s.accuracy, s.coverage)
     # the predictable sequential stream (Ads1-like CPU inference analogue)
     eng = PrefetchEngine(predictor="nextline", buffer_blocks=128, degree=4)
     for b in np.tile(np.arange(512), 8):
         eng.access(int(b), is_far=True)
-    s = eng.stats
+    s = eng.finalized_stats()
     rows.append(("sequential(KV walk)", f"{s.accuracy*100:5.1f}%", f"{s.coverage*100:5.1f}%", f"{s.bw_overhead*100:5.1f}%"))
     print(f"[fig22] far-tier prefetcher accuracy/coverage (predictor={predictor})")
     print(fmt_table(rows, ["workload", "accuracy", "coverage", "bw overhead"]))
     print("paper: accuracy >75%, coverage <50% for most services; regular streams prefetch well")
+
+    # -- part 2: trace-trained successor table vs the hardware baselines
+    comp = template_comparison()
+    rows = []
+    for name, res in comp.items():
+        for p in ("nextline", "markov", "trace"):
+            s = res[p]
+            rows.append(
+                (
+                    name if p == "nextline" else "",
+                    p,
+                    f"{s.accuracy*100:5.1f}%",
+                    f"{s.coverage*100:5.1f}%",
+                    f"{s.bw_overhead*100:5.1f}%",
+                    s.unused_evicted,
+                )
+            )
+        tr, nl, mk = res["trace"], res["nextline"], res["markov"]
+        assert tr.coverage > nl.coverage, (name, tr.coverage, nl.coverage)
+        assert tr.coverage > mk.coverage, (name, tr.coverage, mk.coverage)
+        assert tr.bw_overhead <= nl.bw_overhead + BW_EPS, (name, tr.bw_overhead, nl.bw_overhead)
+        assert tr.bw_overhead <= mk.bw_overhead + BW_EPS, (name, tr.bw_overhead, mk.bw_overhead)
+        out[f"template:{name}"] = {p: (res[p].accuracy, res[p].coverage) for p in res}
+    print("\n[fig22b] template-walk streams: trace-trained table vs hardware baselines")
+    print(fmt_table(rows, ["workload", "predictor", "accuracy", "coverage", "bw overhead", "wasted pages"]))
+    print("trace training closes the coverage gap at equal-or-lower waste (self-checked)")
     return out
 
 

@@ -25,6 +25,12 @@ class TraceWindow:
     start_step: int
     blocks: np.ndarray  # int64
     is_write: np.ndarray  # bool
+    # per-access stream id (decode slot / request / trace lane), int64.
+    # None on traces recorded before stream tagging; consumers must treat
+    # that as "one unknown stream", never as "stream 0 of many" — training
+    # per-stream predictors on an untagged interleaved trace is exactly the
+    # aggregate-stream contamination core/prefetch.py exists to avoid.
+    stream: Optional[np.ndarray] = None
 
 
 class MemTracer:
@@ -44,9 +50,14 @@ class MemTracer:
     def tick(self):
         self.step += 1
 
-    def record(self, blocks, is_write=False):
+    def record(self, blocks, is_write=False, stream=0):
         """Called by the engine for every batch of block accesses; cheap
-        (appends) only while attached — the low-overhead property."""
+        (appends) only while attached — the low-overhead property.
+
+        ``stream`` tags every access in the batch with the logical stream
+        it belongs to (decode slot / request id) so trace consumers — the
+        prefetcher's successor training above all — can recover per-stream
+        order from the interleaved window."""
         if not self.attached:
             if self._open is not None:
                 self._flush()
@@ -56,13 +67,15 @@ class MemTracer:
             self._open_start = self.step
         b = np.asarray(blocks).reshape(-1)
         w = np.broadcast_to(np.asarray(is_write), b.shape)
-        self._open.append((b.astype(np.int64), w.astype(bool)))
+        s = np.broadcast_to(np.asarray(stream), b.shape)
+        self._open.append((b.astype(np.int64), w.astype(bool), s.astype(np.int64)))
 
     def _flush(self):
         if self._open:
             bs = np.concatenate([x[0] for x in self._open])
             ws = np.concatenate([x[1] for x in self._open])
-            self.windows.append(TraceWindow(self._open_start, bs, ws))
+            ss = np.concatenate([x[2] for x in self._open])
+            self.windows.append(TraceWindow(self._open_start, bs, ws, ss))
         self._open = None
 
     def stitch(self) -> TraceWindow:
@@ -70,11 +83,20 @@ class MemTracer:
         if self._open is not None:
             self._flush()
         if not self.windows:
-            return TraceWindow(0, np.zeros(0, np.int64), np.zeros(0, bool))
+            return TraceWindow(
+                0, np.zeros(0, np.int64), np.zeros(0, bool), np.zeros(0, np.int64)
+            )
+        streams = [
+            w.stream
+            if w.stream is not None
+            else np.zeros(w.blocks.size, np.int64)
+            for w in self.windows
+        ]
         return TraceWindow(
             self.windows[0].start_step,
             np.concatenate([w.blocks for w in self.windows]),
             np.concatenate([w.is_write for w in self.windows]),
+            np.concatenate(streams),
         )
 
     def overhead_frac(self) -> float:

@@ -71,7 +71,13 @@ class RequestGenerator:
         decode_len = max(1, int(self.rng.exponential(p.decode_mean)))
         return Request(rid, tokens, decode_len, pid, self._clock, self.tenant)
 
-    def block_stream(self, n: int, n_blocks: Optional[int] = None, n_streams: int = 4) -> np.ndarray:
+    def block_stream(
+        self,
+        n: int,
+        n_blocks: Optional[int] = None,
+        n_streams: int = 4,
+        return_lanes: bool = False,
+    ) -> np.ndarray:
         """State-block access stream for this service — MemProf.MemBW's
         sampled miss stream.
 
@@ -80,6 +86,11 @@ class RequestGenerator:
         and re-seed at a Zipf-hot block with probability ``seq_jump`` —
         low-jump services (Ads1, CPU inference) are stream-prefetchable,
         high-jump ones (Cache1/2 key-value lookups) are not (Fig. 21/22).
+
+        ``return_lanes=True`` also returns the per-access lane (stream) id —
+        the per-stream tag a trace-driven prefetcher trains on; without it a
+        consumer sees the interleaved aggregate, which is exactly the
+        mistraining hazard core/prefetch.py documents.
         """
         nb = n_blocks or self.p.n_blocks
         ranks = np.arange(1, nb + 1, dtype=np.float64)
@@ -98,7 +109,71 @@ class RequestGenerator:
             else:
                 pos[s] = (pos[s] + 1) % nb
             out[i] = pos[s]
+        if return_lanes:
+            return out, lane.astype(np.int64)
         return out
+
+    def template_stream(
+        self,
+        n: int,
+        n_blocks: Optional[int] = None,
+        n_templates: int = 8,
+        template_len: int = 12,
+        suffix_len: int = 4,
+        n_streams: int = 4,
+        phases: int = 1,
+    ):
+        """Paged-KV template walk: the stream shape trace-driven prefetch wins.
+
+        Real serving traffic re-walks hot prompt TEMPLATES: a request reads
+        its template's page chain, then a short private suffix. Crucially
+        the chain's physical page ids are SCATTERED — the pagetable
+        allocated them whenever the template first appeared, so consecutive
+        chain pages are not consecutive ids. A nextline/stride prefetcher
+        gets ~nothing from the chain (the successor of page 731 is page 88),
+        an online markov table must re-learn every chain per run under its
+        confidence gates, but a successor table trained on stream-tagged
+        trace windows covers every repeat of a chain seen anywhere in the
+        fleet. Suffix pages are private and unpredictable for everyone —
+        they keep accuracy honest.
+
+        ``phases > 1`` re-draws template popularity every ``n/phases``
+        accesses (the phase-shifting workload of the tiered-decode bench):
+        hotness moves but the CHAINS persist, so trained successors stay
+        valid across phases while pure-hotness placement lags each shift.
+
+        Returns ``(blocks, lanes)`` — int64 arrays; ``lanes`` tags each
+        access with its stream (decode slot analogue).
+        """
+        nb = n_blocks or self.p.n_blocks
+        need = n_templates * template_len
+        assert need < nb, "template chains must fit the block space"
+        perm = self.rng.permutation(nb)
+        chains = perm[:need].reshape(n_templates, template_len)
+        pool = perm[need:]
+        ranks = np.arange(1, n_templates + 1, dtype=np.float64)
+        pz = ranks ** -max(self.p.zipf_alpha, 0.8)
+        pz /= pz.sum()
+        order = np.arange(n_templates)
+        phase_len = max(1, n // max(1, phases))
+        out = np.empty(n, np.int64)
+        lanes = np.empty(n, np.int64)
+        cur = [np.empty(0, np.int64) for _ in range(n_streams)]
+        pos = [0] * n_streams
+        for i in range(n):
+            if phases > 1 and i > 0 and i % phase_len == 0:
+                # popularity rotates; the chains themselves persist
+                order = self.rng.permutation(n_templates)
+            lane = int(self.rng.integers(0, n_streams))
+            if pos[lane] >= cur[lane].size:
+                t = int(order[self.rng.choice(n_templates, p=pz)])
+                sfx = self.rng.choice(pool, size=suffix_len, replace=False)
+                cur[lane] = np.concatenate([chains[t], sfx.astype(np.int64)])
+                pos[lane] = 0
+            out[i] = cur[lane][pos[lane]]
+            lanes[i] = lane
+            pos[lane] += 1
+        return out, lanes
 
 
 def interleave(gens: Sequence[RequestGenerator], n: int) -> List[Request]:

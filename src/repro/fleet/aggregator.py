@@ -22,8 +22,14 @@ import numpy as np
 
 from repro.core import distribution
 from repro.core.memtrace import TraceWindow, validate_trace
+from repro.core.prefetch import train_successors
 from repro.fleet.replica import Replica, ReplicaProfile
 from repro.obs import MetricSnapshot, merge_snapshots
+
+# per-replica stream-id namespace stride for fleet-pooled successor
+# training: stream ids are engine seq ids (< 2**32 in any real run), so
+# shifting by the rid keeps two hosts' streams from ever chaining together
+_STREAM_STRIDE = 1 << 32
 
 
 def export_all(replicas: List[Replica]) -> List[ReplicaProfile]:
@@ -98,10 +104,58 @@ def stitch_fleet(profiles: List[ReplicaProfile], n_pages: Optional[int] = None) 
             tagged.append((p.clock_offset + w.start_step * p.step_cost, p.rid, w))
     tagged.sort(key=lambda t: (t[0], t[1]))
     if not tagged:
-        return TraceWindow(0, np.zeros(0, np.int64), np.zeros(0, bool))
+        return TraceWindow(
+            0, np.zeros(0, np.int64), np.zeros(0, bool), np.zeros(0, np.int64)
+        )
     blocks = np.concatenate([w.blocks + rid * n_pages for _, rid, w in tagged])
     writes = np.concatenate([w.is_write for _, _, w in tagged])
-    return TraceWindow(tagged[0][2].start_step, blocks, writes)
+    streams = np.concatenate(
+        [
+            (
+                w.stream
+                if w.stream is not None
+                else np.zeros(w.blocks.size, np.int64)
+            )
+            + rid * _STREAM_STRIDE
+            for _, rid, w in tagged
+        ]
+    )
+    return TraceWindow(tagged[0][2].start_step, blocks, writes, streams)
+
+
+def train_fleet_successors(
+    profiles: List[ReplicaProfile],
+    min_count: int = 2,
+    min_frac: float = 0.3,
+    max_successors: int = 2,
+) -> dict:
+    """Train ONE successor table from every host's trace windows.
+
+    This is the paper's point in acting form: the fleet tracing tool
+    exists to drive better prefetchers. Blocks stay in the shared LOGICAL
+    page-id space — the same "same code on many hosts" premise that lets
+    ``aggregate_counts`` sum histograms lets transitions observed on any
+    host count as evidence for all of them — while stream ids are
+    namespaced per replica, so two hosts' request streams never chain into
+    each other (that would re-create the interleaving contamination the
+    per-stream model exists to kill). Pooling windows and retraining beats
+    merging the per-host ``ReplicaProfile.successors`` tables: counts from
+    different hosts reinforce each other through the confidence gates.
+    """
+    tagged = []
+    for p in profiles:
+        for w in p.windows:
+            s = (
+                w.stream
+                if w.stream is not None
+                else np.zeros(w.blocks.size, np.int64)
+            )
+            tagged.append(
+                TraceWindow(w.start_step, w.blocks, w.is_write, s + p.rid * _STREAM_STRIDE)
+            )
+    return train_successors(
+        tagged, min_count=min_count, min_frac=min_frac, max_successors=max_successors
+    )
 
 
 def live_fleet_counters(profiles: List[ReplicaProfile]) -> dict:

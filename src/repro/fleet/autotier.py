@@ -68,6 +68,10 @@ class TierEpoch:
     # plan is a drain boundary — so these never lag the plan's inputs
     device_dispatches: int = 0
     device_host_syncs: int = 0
+    # fleet-trained prefetch successor table pushed alongside the near set
+    # ({block: (succ, ...)}): the trace-driven prefetcher's fleet plane —
+    # sequences learned on any host prefetch for all of them
+    prefetch_table: Dict[int, tuple] = dataclasses.field(default_factory=dict)
 
 
 class AutoTierer:
@@ -105,8 +109,14 @@ class AutoTierer:
         if counts.size == 0 or counts.sum() == 0:
             return None
         p = tiering.plan(counts, self.specs)
+        # the prefetch plane rides the placement epoch: one table trained
+        # from every host's stream-tagged windows, pushed with the near set
+        table = aggregator.train_fleet_successors(profiles)
         moved_before = sum(r.device_moved_bytes for r in self.replicas)
         migrated = sum(r.apply_placement(p.hot_blocks) for r in self.replicas)
+        if table:
+            for r in self.replicas:
+                r.load_successors(table)
         device_moved = sum(r.device_moved_bytes for r in self.replicas) - moved_before
         overlap = 0.0
         if self.history:
@@ -140,6 +150,7 @@ class AutoTierer:
             device_moved_bytes=device_moved,
             device_dispatches=sum(d["dispatches"] for d in dev),
             device_host_syncs=sum(d["host_syncs"] for d in dev),
+            prefetch_table=table,
         )
         self.history.append(epoch)
         return epoch
@@ -148,6 +159,11 @@ class AutoTierer:
     def warm_near_ids(self) -> Optional[np.ndarray]:
         """Latest pushed near set — what a scaled-up replica warms from."""
         return self.history[-1].near_ids if self.history else None
+
+    def warm_successors(self) -> Dict[int, tuple]:
+        """Latest fleet prefetch table — a joining host predicts from its
+        first step instead of cold-starting its own trace training."""
+        return self.history[-1].prefetch_table if self.history else {}
 
     @property
     def converged(self) -> bool:

@@ -174,6 +174,12 @@ class ElasticFleet:
         if warm is not None:
             # the fleet plan is the service's hotness, valid on any host
             r.apply_placement(warm)
+        if self.autotierer is not None:
+            table = self.autotierer.warm_successors()
+            if table:
+                # the prefetch plane warms with the tier plane: learned
+                # sequences are a service property too
+                r.load_successors(table)
         self.router.replicas.append(r)
         self._last_decision = now
         self._record_event(

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.memtrace import CacheSim, TraceWindow
+from repro.core.prefetch import train_successors
 from repro.data.requests import Request
 from repro.obs import MetricSnapshot
 from repro.runtime.serving import EngineConfig, ServingEngine
@@ -58,6 +59,12 @@ class ReplicaProfile:
     # a retired host contributes to the fleet metrics merge after its live
     # registry is gone
     metrics: Optional[MetricSnapshot] = None
+    # successor table trained from THIS host's stream-tagged trace windows
+    # ({block: (succ, ...)}): the per-host export surface of the trace-
+    # driven prefetcher. The AutoTierer pools the raw windows of every
+    # profile and retrains fleet-wide instead of merging these — but a
+    # retired host's table (via extra_profiles) is still inspectable.
+    successors: Dict[int, tuple] = dataclasses.field(default_factory=dict)
 
     @property
     def n_pages(self) -> int:
@@ -181,7 +188,13 @@ class Replica:
             clock_offset=self.created_at,
             device_tiering=None if eng.tiered is None else eng.tiered.stats(),
             metrics=eng.metrics.snapshot(),
+            successors=train_successors(eng.tracer.windows[-64:]),
         )
+
+    def load_successors(self, table: dict):
+        """Install a fleet-trained successor table into this host's
+        prefetcher (wholesale: the fleet table saw strictly more data)."""
+        self.engine.prefetch.load_successors(table)
 
     @property
     def device_moved_bytes(self) -> int:

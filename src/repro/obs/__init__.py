@@ -40,6 +40,7 @@ from repro.obs.metrics import (
     MetricsRegistry,
     merge_snapshots,
     merged_histogram,
+    prefetch_report,
     sum_counters,
 )
 from repro.obs.spans import Span, SpanRecorder
@@ -52,6 +53,7 @@ __all__ = [
     "MetricsRegistry",
     "merge_snapshots",
     "merged_histogram",
+    "prefetch_report",
     "sum_counters",
     "Span",
     "SpanRecorder",

@@ -261,3 +261,30 @@ def merged_histogram(snap: MetricSnapshot, name: str) -> Optional[Histogram]:
     for h in hs:
         out.merge(h)
     return out
+
+
+def prefetch_report(snap: MetricSnapshot) -> dict:
+    """Paper-formula prefetcher scores from the registry's prefetch books.
+
+    Derives accuracy / coverage / wasted bytes from the drain-synced
+    counters (``prefetch_issued_pages`` etc.) instead of reaching into the
+    live engine — so the same report works on a merged fleet snapshot or a
+    retired replica's frozen profile, and inherits the drain-cadence
+    invariant: identical numbers at any drain schedule. Ratios use the
+    exact formulas of ``core.prefetch.PrefetchStats``.
+    """
+    issued = sum_counters(snap, "prefetch_issued_pages")
+    used = sum_counters(snap, "prefetch_used_pages")
+    unused = sum_counters(snap, "prefetch_unused_evicted_pages")
+    demand = sum_counters(snap, "prefetch_demand_fetches")
+    denom = issued + demand - unused
+    return {
+        "issued_pages": issued,
+        "used_pages": used,
+        "unused_evicted_pages": unused,
+        "demand_fetches": demand,
+        "promoted_pages": sum_counters(snap, "prefetch_promoted_pages"),
+        "wasted_bytes": sum_counters(snap, "prefetch_wasted_bytes"),
+        "accuracy": 1.0 - unused / issued if issued else 1.0,
+        "coverage": (issued - unused) / denom if denom > 0 else 0.0,
+    }

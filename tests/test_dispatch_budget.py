@@ -165,6 +165,58 @@ def test_store_segments_match_per_call_totals():
     assert per_call.dispatches == 2 * len(seg_sets)  # incl. the re-reads above
 
 
+def test_prefetch_promote_window_keeps_budget():
+    """The trace-driven prefetch issue window (prefetch_promote) batches its
+    promotions into the boundary drain: identical traffic with the window on
+    must hold the 1-dispatch budget and add ZERO host syncs vs promote-off.
+    The window's apply_placement runs right after the boundary drain, when
+    the counter plane is clean — migrations never touch the sync books."""
+    runs = {}
+    for promote in (False, True):
+        cfg, eng = _mk_engine(
+            True, predictor="trace", prefetch_promote=promote, near_frac=0.05,
+        )
+        gen = _gen(cfg, seed=3)
+        stats = eng.run(gen, n_requests=8, max_steps=300)
+        assert eng.tiered.dispatches == eng.engine_steps
+        runs[promote] = (stats, eng)
+    (s_off, _), (s_on, eng_on) = runs[False], runs[True]
+    d_off, d_on = s_off["device_tiering"], s_on["device_tiering"]
+    assert d_on["dispatches_per_step"] <= 1.0 + 1e-9
+    assert d_on["host_syncs_per_step"] <= d_off["host_syncs_per_step"] + 1e-9
+    # the window actually ran: promotions were charged to the prefetch books
+    assert s_on["prefetch_promoted_pages"] >= 0
+    assert s_off["prefetch_promoted_pages"] == 0
+    # promoted pages flow through mark_prefetched into the prefetch books
+    st = eng_on.prefetch.finalized_stats()
+    assert st.total_prefetched >= s_on["prefetch_promoted_pages"]
+
+
+def test_drain_cadence_equivalence_with_promote():
+    """Per-step drains vs windowed drains with the promote window ON: the
+    drain is a pure sum, so the prefetch window's decisions — and the tier
+    books — must be identical under either cadence."""
+    engines = []
+    for _ in range(2):
+        cfg, e = _mk_engine(True, predictor="trace", prefetch_promote=True)
+        gen = _gen(cfg, seed=5)
+        for _ in range(6):
+            e.submit(next(gen))
+        engines.append(e)
+    windowed, every_step = engines
+    while (windowed.queue or any(s.active for s in windowed.slots)) and windowed.engine_steps < 200:
+        windowed.step()
+        every_step.step()
+        every_step.drain_tier_counters()
+    sw, se = windowed.stats(), every_step.stats()
+    assert sw["near_hit_rate"] == se["near_hit_rate"]
+    assert sw["prefetch_promoted_pages"] == se["prefetch_promoted_pages"]
+    assert np.array_equal(windowed.placement.tier, every_step.placement.tier)
+    dw, de = sw["device_tiering"], se["device_tiering"]
+    assert (dw["near_hits"], dw["far_hits"]) == (de["near_hits"], de["far_hits"])
+    assert de["drains"] > dw["drains"]
+
+
 # ---------------------------------------------------------------------------
 # 3. deque admission
 

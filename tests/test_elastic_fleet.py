@@ -57,6 +57,7 @@ def _burst_run(fleet, n_requests=60, submit_per_step=6, seed=0):
 # scale-up: warm-tier handoff
 
 
+@pytest.mark.slow
 def test_scale_up_warms_near_tier_from_fleet_plan():
     """Acceptance: a scaled-up replica's initial near set IS the
     AutoTierer's latest pushed plan (truncated to the host's capacity),
@@ -94,6 +95,7 @@ def test_scale_up_without_plan_cold_starts():
 _MANUAL = dict(min_replicas=1, max_replicas=5, cooldown=1e9)
 
 
+@pytest.mark.slow
 def test_drained_replica_profile_folds_into_fleet_histogram():
     fleet = _elastic_fleet(elastic=dict(_MANUAL))
     _burst_run(fleet, n_requests=16, submit_per_step=2)
@@ -123,6 +125,7 @@ def test_drained_replica_profile_folds_into_fleet_histogram():
     assert stats["requests_finished"] == stats["routed"]
 
 
+@pytest.mark.slow
 def test_drained_replica_never_receives_new_work():
     fleet = _elastic_fleet(elastic=dict(_MANUAL))
     _burst_run(fleet, n_requests=8, submit_per_step=2)
@@ -137,6 +140,7 @@ def test_drained_replica_never_receives_new_work():
 # acceptance: the full cycle
 
 
+@pytest.mark.slow
 def test_burst_triggers_scale_cycle_and_trace_stays_valid():
     """Acceptance: an arrival burst scales the fleet up; the post-burst
     quiet period drains + retires; the stitched fleet trace (including
@@ -156,6 +160,7 @@ def test_burst_triggers_scale_cycle_and_trace_stays_valid():
     assert abs(val["rw_ratio_error_pct"]) <= 5.0, val
 
 
+@pytest.mark.slow
 def test_scale_cycle_is_deterministic():
     events = []
     for _ in range(2):
@@ -193,6 +198,7 @@ def test_stitch_orders_late_joiner_windows_by_join_time():
     assert trace.blocks[0] == 1 and trace.blocks[-1] == 2 + 8  # namespaced
 
 
+@pytest.mark.slow
 def test_scaled_up_replica_records_join_time():
     fleet = _elastic_fleet()
     _burst_run(fleet, n_requests=12, submit_per_step=2)

@@ -55,6 +55,7 @@ def run_fleet(
 # router policies
 
 
+@pytest.mark.slow
 def test_prefix_affinity_colocates_shared_prefixes():
     fleet, stats = run_fleet("prefix-affinity")
     # every template has exactly one home replica
@@ -67,6 +68,7 @@ def test_prefix_affinity_colocates_shared_prefixes():
     assert stats["prefill_tokens_saved"] > rr_stats["prefill_tokens_saved"]
 
 
+@pytest.mark.slow
 def test_affinity_beats_round_robin_throughput():
     """Acceptance: fleet-level value of the shared-TLB observation."""
     _, aff = run_fleet("prefix-affinity")
@@ -75,6 +77,7 @@ def test_affinity_beats_round_robin_throughput():
     assert aff["requests_finished"] == rr["requests_finished"] == 16
 
 
+@pytest.mark.slow
 def test_least_loaded_spreads_work():
     fleet, stats = run_fleet("least-loaded", profile=web_profile(prefix_share=0.0))
     per = stats["per_replica"]
@@ -123,6 +126,7 @@ def test_stitch_namespaces_physical_pages():
     assert live["rw_ratio"] == pytest.approx(3.0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("policy", ["round-robin", "least-loaded", "prefix-affinity"])
 def test_fleet_trace_validates_within_5pct(policy):
     """Acceptance: stitched fleet trace vs live fleet counters (Table 6).
@@ -169,6 +173,7 @@ def _equiv_run(lockstep):
     )
 
 
+@pytest.mark.slow
 def test_event_driven_reproduces_lockstep_exactly():
     """Acceptance: homogeneous speeds + no scaling => identical fleet_stats.
 
@@ -192,6 +197,7 @@ def test_event_driven_reproduces_lockstep_exactly():
     assert all(np.array_equal(a.near_ids, b.near_ids) for a, b in zip(hl, he))
 
 
+@pytest.mark.slow
 def test_straggler_event_driven_beats_lockstep():
     """Acceptance: a 4x straggler gates the lockstep barrier (every fleet
     step costs max(step_cost)) but only its own host under the event
@@ -216,6 +222,7 @@ def test_straggler_event_driven_beats_lockstep():
     assert tput[False] > 1.5 * tput[True], tput
 
 
+@pytest.mark.slow
 def test_truncated_run_offer_books_match_lockstep():
     """Horizon truncation must not desync the modes' arrival schedules:
     lockstep offers at iteration starts 0..max_steps-1, so event mode must
@@ -232,6 +239,7 @@ def test_truncated_run_offer_books_match_lockstep():
     assert books[True][0] + books[True][2] == 10  # 5 ticks x 2 offered
 
 
+@pytest.mark.slow
 def test_truncated_event_run_resumes_cleanly():
     """Regression: a horizon-truncated event run discards un-executed
     completion events; the in-flight markers must be cleared with them or
@@ -246,6 +254,7 @@ def test_truncated_event_run_resumes_cleanly():
     assert stats["requests_finished"] == stats["routed"]
 
 
+@pytest.mark.slow
 def test_replica_step_cost_hook():
     fleet, _ = run_fleet("round-robin", n_requests=4)
     r = fleet.replicas[0]
@@ -263,6 +272,7 @@ def test_replica_step_cost_hook():
 # autotier (online fleet re-tiering)
 
 
+@pytest.mark.slow
 def test_autotier_converges_on_stationary_workload():
     prof = web_profile(prefix_share=0.6, decode_mean=10)
     fleet, stats = run_fleet(

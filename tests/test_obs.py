@@ -239,6 +239,7 @@ def _counter_totals(engine):
     return {k: v for k, v in snap.counters.items() if k[0] not in _SYNC_METERS}
 
 
+@pytest.mark.slow
 def test_recorder_and_drain_cadence_leave_books_identical():
     """Recorder ON + drain every step vs recorder OFF + window drains:
     identical tokens, live_counters, and registry totals — tracing adds no
@@ -326,12 +327,14 @@ def traced_scenario(tmp_path_factory):
     return fleet, rec, stats, summary, out
 
 
+@pytest.mark.slow
 def test_scenario_scaled_and_served(traced_scenario):
     fleet, rec, stats, summary, out = traced_scenario
     assert stats["requests_finished"] > 0
     assert any(e[1] == "up" for e in stats["scale_events"]), stats["scale_events"]
 
 
+@pytest.mark.slow
 def test_scenario_trace_is_perfetto_loadable(traced_scenario):
     fleet, rec, stats, summary, out = traced_scenario
     # write() already ran the schema gate; re-validate the on-disk file
@@ -353,6 +356,7 @@ def test_scenario_trace_is_perfetto_loadable(traced_scenario):
     assert any(k.startswith("tokens_decoded") for k in rows[-1])
 
 
+@pytest.mark.slow
 def test_scenario_fleet_merge_matches_fleet_stats_bit_exactly(traced_scenario):
     fleet, rec, stats, summary, out = traced_scenario
     merged = fleet.fleet_metrics()
@@ -372,6 +376,7 @@ def test_scenario_fleet_merge_matches_fleet_stats_bit_exactly(traced_scenario):
     assert sum_counters(prof_merge, "near_hits") == near
 
 
+@pytest.mark.slow
 def test_scenario_wait_percentiles_pin_legacy(traced_scenario):
     """New histogram p50/p99 vs legacy np.percentile over the raw samples:
     within one exponential bucket (and bit-equal on zero waits)."""
@@ -400,6 +405,7 @@ def test_scenario_wait_percentiles_pin_legacy(traced_scenario):
     assert saw_nonzero, "scenario produced no queueing — pin is vacuous"
 
 
+@pytest.mark.slow
 def test_scenario_histograms_merge_fleet_wide(traced_scenario):
     fleet, rec, stats, summary, out = traced_scenario
     merged = fleet.fleet_metrics()

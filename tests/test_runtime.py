@@ -37,6 +37,7 @@ def _mk_trainer(tmp, arch="smollm-360m", **tkw):
 # trainer
 
 
+@pytest.mark.slow
 def test_loss_decreases(tmp_path):
     cfg, api, tr = _mk_trainer(tmp_path)
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seq_len=16)
@@ -47,6 +48,7 @@ def test_loss_decreases(tmp_path):
     assert last < first, (first, last)
 
 
+@pytest.mark.slow
 def test_crash_resume_bitwise(tmp_path):
     """Crash at step 5, restart -> identical params at step 9 as a clean run."""
     cfg, api, tr = _mk_trainer(tmp_path / "a")

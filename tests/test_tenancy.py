@@ -120,6 +120,7 @@ def test_equal_weights_alternate():
 # queue-wait latency percentiles (virtual-time wait per tenant)
 
 
+@pytest.mark.slow
 def test_bursty_tenant_p99_does_not_inflate_neighbor():
     """A burst tenant's overload queues behind its own weighted-fair share:
     its p99 wait blows up, the well-behaved tenant's stays near zero."""
@@ -143,6 +144,7 @@ def test_bursty_tenant_p99_does_not_inflate_neighbor():
     assert rep["web"]["wait_p99"] <= 2.0, rep["web"]
 
 
+@pytest.mark.slow
 def test_two_tenants_independent_shed_accounting():
     adm = AdmissionController(
         SLOModel(max_delay_steps=64.0),
@@ -171,6 +173,7 @@ def test_two_tenants_independent_shed_accounting():
 # acceptance: per-tenant histograms partition the combined histogram
 
 
+@pytest.mark.slow
 def test_tenant_histograms_sum_to_combined():
     fleet = _fleet(autotier=dict(near_frac=0.3, epoch_steps=8))
     reqs = interleave(_two_tenant_gens(), 24)
@@ -195,6 +198,7 @@ def test_tenant_histograms_sum_to_combined():
         assert rep["tenants"][t]["total_accesses"] > 0
 
 
+@pytest.mark.slow
 def test_autotier_reports_per_tenant_near_fracs():
     fleet = _fleet(autotier=dict(near_frac=0.3, epoch_steps=8))
     reqs = interleave(_two_tenant_gens(), 24)

@@ -273,6 +273,7 @@ def _run_collect(eng, cfg, n_requests=6, seed=0):
     return np.array(tokens)
 
 
+@pytest.mark.slow
 def test_device_decode_bit_identical_to_host_accounting():
     """The acceptance oracle: identity scales => same tokens, same counters."""
     cfg, host = _mk_engine(False)
@@ -297,6 +298,7 @@ def test_device_decode_bit_identical_to_host_accounting():
     assert devstats["max_read_error"] == 0.0
 
 
+@pytest.mark.slow
 def test_device_mode_quantized_counters_still_match():
     """Real (absmax) scales perturb VALUES only — the control plane (tokens
     come from the model cache, counters from the tier map) stays exact."""
@@ -310,6 +312,7 @@ def test_device_mode_quantized_counters_still_match():
     assert dev.stats()["device_tiering"]["far_hits"] > 0
 
 
+@pytest.mark.slow
 def test_fleet_trace_validation_with_device_counters():
     """Stitched fleet-trace validation stays <=5% when every host feeds the
     aggregator from device-counted tiering."""
@@ -376,6 +379,7 @@ def test_migrate_free_slot_bookkeeping():
         assert store.near_count == near.size
 
 
+@pytest.mark.slow
 def test_autotier_epoch_migrates_consistently_on_every_host():
     """An AutoTierer epoch over 3 replicas pushes ONE fleet plan: every
     host's placement AND device tier map converge to the same near set,
