@@ -44,6 +44,17 @@ plan, and drained hosts fold their MemProf profile into the aggregate
 before retiring. The straggler/autoscale demo below shows both;
 benchmarks/straggler_bench.py is the quantitative study.
 
+Continuous batching: give replicas ``EngineConfig(prefill_chunk=16, ...)``
+and each engine refills freed slots every step, feeding prompts in
+chunk-budget token slices interleaved with decode inside its single
+per-step dispatch (whole-slot monolithic prefill at ``prefill_chunk=0``,
+the default). The admission controller's backlog estimate is chunk-aware —
+a mid-prefill slot owes only its REMAINING chunk tokens, weighted by the
+SLO's ``prefill_weight``, so elastic scaling does not over-shed during
+long-prompt admission waves — and ``fleet_stats()["tenants"]`` gains
+``ttft_p50``/``ttft_p99`` (submit -> first generated token, virtual time)
+merged bucket-wise from the per-engine TTFT histograms.
+
 Flight recorder (repro.obs)
 ---------------------------
 Pass ``build_fleet(recorder=FlightRecorder())`` (or set

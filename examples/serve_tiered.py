@@ -33,6 +33,17 @@ books bit-identically to per-step charging. benchmarks/decode_dispatch_bench.py
 measures the budget: 1 dispatch + ~1/window syncs per step vs ~slots of
 each on the retired per-slot path (``EngineConfig.segmented_lookup=False``).
 
+Continuous batching + chunked prefill: set ``EngineConfig.prefill_chunk``
+to a positive token budget (e.g. 16) and the step becomes a vLLM-style
+continuous-batching step — freed slots are refilled EVERY step and prompts
+are fed in ``prefill_chunk``-token chunks interleaved with the co-resident
+decode tokens inside the same single dispatch (prefill-chunk page reads
+ride the segmented gather as prefill-role segments; completed prompt pages
+go through the tiered write path as they finish). ``prefill_chunk=0`` (the
+default) keeps the whole-slot path: the full prompt prefills at admit via
+one extra blocking ``api.prefill`` dispatch. The offered-load cells in
+decode_dispatch_bench compare the two on tokens/s and p99 TTFT.
+
 PYTHONPATH=src python examples/serve_tiered.py
 """
 import dataclasses

@@ -25,6 +25,40 @@ class Request:
     tenant: str = "default"  # service identity for multi-tenant fleets
 
 
+@dataclasses.dataclass
+class ChunkState:
+    """Prefill progress of one admitted request under chunked prefill.
+
+    The continuous-batching engine splits a prompt into fixed-token-budget
+    chunks interleaved with decode inside the same segmented dispatch; this
+    tracks how far the prompt has been fed. ``pos`` counts tokens already
+    written into the slot's KV cache; the request leaves the prefill phase
+    when ``done`` (its first generated token is emitted by the same step
+    that consumed the final prompt token).
+    """
+
+    tokens: np.ndarray  # the (possibly truncated) prompt being prefilled
+    pos: int = 0  # prompt tokens already prefilled into the slot
+
+    @property
+    def total(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.pos
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= self.total
+
+    def take(self, budget: int) -> np.ndarray:
+        """Next chunk of at most ``budget`` tokens (does NOT advance ``pos``;
+        the engine advances only after the dispatch lands)."""
+        assert budget > 0, budget
+        return self.tokens[self.pos : self.pos + budget]
+
+
 class RequestGenerator:
     def __init__(
         self,

@@ -116,6 +116,10 @@ class AdmissionController:
 
         Queued prompts are discounted by the same ``prefill_weight`` as
         ``request_cost`` so admission and its SLO share one cost model.
+        Chunk-aware via ``ServingEngine.backlog_tokens``: under chunked
+        prefill a mid-prefill slot owes only its REMAINING chunk tokens,
+        so pressure (and the elastic controller reading it) does not
+        over-shed during long-prompt admission waves.
         """
         work = sum(r.engine.backlog_tokens(self.slo.prefill_weight) for r in replicas)
         return work / max(self.fleet_rate(replicas), 1)

@@ -42,6 +42,7 @@ from repro.fleet.admission import AdmissionController, SLOModel
 from repro.fleet.replica import Replica, ReplicaProfile
 from repro.fleet.scheduler import ARRIVAL, VirtualScheduler
 from repro.obs import (
+    Histogram,
     MetricSnapshot,
     MetricsRegistry,
     default_recorder,
@@ -519,6 +520,22 @@ class FleetRouter:
             h = self.metrics.histogram("queue_wait", tenant=t)
             o["wait_p50"] = h.quantile(0.50)
             o["wait_p99"] = h.quantile(0.99)
+            # time-to-first-token (submit -> first generated token, virtual
+            # time): recorded by each ENGINE — at admit under whole-slot
+            # prefill, at the prompt-completing chunk step under chunked
+            # prefill — into its registry's per-tenant "ttft" histogram;
+            # merged bucket-wise across replicas, same grid as queue_wait.
+            # Read without the creating .histogram() accessor so replicas
+            # that never served this tenant don't grow empty series.
+            th = Histogram()
+            for r in self.replicas:
+                eh = r.engine.metrics._histograms.get(
+                    ("ttft", (("tenant", t),))
+                )
+                if eh is not None:
+                    th.merge(eh)
+            o["ttft_p50"] = th.quantile(0.50)
+            o["ttft_p99"] = th.quantile(0.99)
         return out
 
     # ------------------------------------------------------------------

@@ -12,6 +12,14 @@ engine drains them once per profiler window.
 ``tiered_lookup_counted`` is the per-call variant (one segment, counters
 returned as int32 scalars); ``tiered_lookup`` keeps the rows-only
 signature for callers that don't consume counters.
+
+Mixed prefill/decode steps (continuous batching) change NOTHING here: a
+prefill-chunk segment is just another (slot, pages) run in the same ragged
+pass. The per-segment role (decode vs prefill) lives entirely in the
+counter plane — ``TieredKVCache.lookup_segments(role_idx=...)`` scatters
+the same per-segment hit pairs into a role-indexed accumulator alongside
+the slot/tenant rows — so the kernel signature and the 1-dispatch budget
+are untouched by the prefill/decode mix.
 """
 from __future__ import annotations
 

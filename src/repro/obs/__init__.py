@@ -9,13 +9,19 @@ threads one instrumentation substrate through admission, routing,
 scheduling, elasticity, the serving engine, and the tiered-KV drain path:
 
 * ``spans``   — request-lifecycle spans (admit/queue/dispatch/prefill/
-  decode/migrate/shed/complete) stamped with scheduler virtual time, in a
-  ring buffer with a drop counter (bounded under million-request runs);
+  decode/migrate/shed/complete, plus per-chunk ``prefill_chunk`` spans
+  under chunked prefill — the ``prefill`` span then covers admission to
+  the prompt-completing chunk, labeled with its chunk count) stamped with
+  scheduler virtual time, in a ring buffer with a drop counter (bounded
+  under million-request runs);
 * ``metrics`` — typed counters/gauges/exponential histograms with tenant +
   replica label dimensions and an exact fleet ``merge``; device-side series
   enter ONLY from ``drain_counters()`` deltas, so the decode hot path stays
   at one dispatch and zero mandatory host syncs per step and the PR-5
-  drain-cadence invariant extends to every metric;
+  drain-cadence invariant extends to every metric. Engines record a
+  per-tenant ``ttft`` histogram (submit -> first generated token, virtual
+  time; the prompt-completing chunk step under chunked prefill), merged
+  into ``tenant_report``'s ``ttft_p50``/``ttft_p99``;
 * ``export``  — Perfetto/Chrome trace_event JSON for the span timeline and
   JSON-lines metric snapshots per profiler window.
 

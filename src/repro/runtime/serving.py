@@ -44,12 +44,31 @@ bit-identically to the retired per-slot path, which is kept as
 benchmark's baseline. The next-token argmax is fused into the jitted
 decode (the step's cache buffers are donated), so the decode feedback loop
 stays on device too.
+
+Continuous batching + chunked prefill (``EngineConfig.prefill_chunk``):
+with a positive chunk budget, ``step`` is a vLLM-style continuous-batching
+step — new requests are admitted into freed slots every step, and their
+prompts are fed in fixed-token-budget chunks INTERLEAVED with the decode
+tokens of co-resident slots inside the SAME single jitted dispatch (a
+masked column scan over the family decode step; every engine step runs
+exactly one model executable and one tiered-gather dispatch regardless of
+the prefill/decode mix). Prefill-chunk KV page reads ride the segmented
+gather as ROLE_PREFILL segments next to the decode walks, prefill chunks
+write KV pages through the tiered write path as they complete, and slot
+cache buffers are donated/reused across join/leave churn (a jitted
+zero-reset at admit; no per-admit batch-1 cache allocation and no
+per-prompt-length XLA compiles — the chunked engine only ever runs two
+decode shapes, (B, 1) and (B, C)). ``prefill_chunk = 0`` (the default)
+means an infinite budget: prompts prefill whole at admit through
+``api.prefill``, the legacy whole-slot path — and the chunk-budget=∞
+equivalence baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,11 +80,24 @@ from repro.core.pagetable import FAR, NEAR, SharedKVPageTable
 from repro.core.placement import TieredPlacement
 from repro.core.prefetch import PrefetchEngine, train_successors
 from repro.core.profiler import AccessProfiler
-from repro.data.requests import Request, RequestGenerator
+from repro.data.requests import ChunkState, Request, RequestGenerator
 from repro.env import env_flag
 from repro.obs import Counter, MetricsRegistry, default_recorder
 from repro.models.api import ModelAPI, make_serve_step
-from repro.runtime.tiered_kv import TieredKVCache, sanitize_near_ids
+from repro.runtime.tiered_kv import (
+    N_ROLES,
+    ROLE_DECODE,
+    ROLE_PREFILL,
+    TieredKVCache,
+    sanitize_near_ids,
+)
+
+# families whose decode_step can consume prompt tokens incrementally (the
+# chunked-prefill substrate). Excluded: "audio" (whisper's cross-attention
+# caches exist only after an encode+prefill pass) and "vlm" (prompt embeds
+# carry M-RoPE positions the decode path does not reconstruct) — both fall
+# back to monolithic prefill at admit regardless of the chunk budget.
+CHUNKABLE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
 
 
 def _env_device_tiering() -> bool:
@@ -107,6 +139,24 @@ def counter_rows(seed: int, page_ids, versions, dim: int) -> np.ndarray:
     return rows.astype(np.float32)
 
 
+def _slot_put(dst, src, slot_idx):
+    """Write a batch-1 cache leaf into slot ``slot_idx`` of a batched leaf.
+    Batch axis differs per leaf family: 1-D leaves (lengths) carry batch on
+    axis 0, everything else on axis 1."""
+    if dst.ndim == 1:
+        return dst.at[slot_idx].set(src[0])
+    return dst.at[:, slot_idx].set(src[:, 0])
+
+
+def _slot_zero(leaf, slot_idx):
+    """Zero one slot of a batched cache leaf (same axis rule as _slot_put).
+    Chunked admission starts prefill from an empty slot — KV lengths reset
+    to 0 and recurrent state cleared — without allocating a fresh cache."""
+    if leaf.ndim == 1:
+        return leaf.at[slot_idx].set(jnp.zeros((), leaf.dtype))
+    return leaf.at[:, slot_idx].set(jnp.zeros((), leaf.dtype))
+
+
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 4
@@ -143,6 +193,12 @@ class EngineConfig:
     prefetch_lookahead: int = 4
     # cap on promoted pages per issue window (bounds wasted bandwidth)
     prefetch_max_promote: int = 32
+    # continuous batching: prefill-chunk token budget per engine step.
+    # 0 = infinite budget (the legacy whole-slot path: the whole prompt
+    # prefills at admit through api.prefill). Positive values split every
+    # prompt into <=prefill_chunk-token chunks interleaved with decode
+    # inside the same single dispatch (CHUNKABLE_FAMILIES only).
+    prefill_chunk: int = 0
 
 
 @dataclasses.dataclass
@@ -155,10 +211,20 @@ class _Slot:
     # labeled with its whole step range
     t_admit: float = 0.0
     start_step: int = 0
+    # chunked prefill: non-None while the slot is still feeding its prompt
+    # (cleared the step the final prompt token lands and the first
+    # generated token is emitted)
+    chunk: Optional[ChunkState] = None
+    chunks_done: int = 0  # prefill chunks this occupancy has dispatched
+    shared_pages: int = 0  # prefix pages shared at admit (span labeling)
 
     @property
     def active(self) -> bool:
         return self.seq_id >= 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self.active and self.chunk is not None
 
 
 class ServingEngine:
@@ -242,6 +308,33 @@ class ServingEngine:
         # step_cost_fn hooks price steps with it: far reads stall the step.
         self.last_step_far_frac = 0.0
         self._m_pf_promoted = self.metrics.counter("prefetch_promoted_pages")
+        # model-dispatch books (satellite of the 1-dispatch/step budget):
+        # model_dispatches counts every model executable launched — the
+        # fused decode/chunk step AND any monolithic api.prefill pass the
+        # whole-slot path pays per admit; prefill_dispatches counts just
+        # the latter, so test_dispatch_budget can pin "chunked = exactly
+        # one model dispatch per step, prefill folded in".
+        self.model_dispatches = 0
+        self.prefill_dispatches = 0
+        # time-to-first-token: stamped at submit(), recorded the moment a
+        # request's first generated token exists (admit-time under the
+        # whole-slot path; the prompt-completing chunk step under chunked
+        # prefill). Virtual-time samples feed the per-tenant "ttft"
+        # histogram + the pinning test; wall-clock samples feed the
+        # offered-load benchmark cells.
+        self._enq_vt: Dict[int, float] = {}
+        self._enq_wall: Dict[int, float] = {}
+        self.ttft_vt_samples: List[float] = []
+        self.ttft_wall_samples: List[float] = []
+        # per-role (decode, prefill) x (near, far) tier hits drained from
+        # the device counter plane's role accumulator
+        self.role_hits = np.zeros((N_ROLES, 2), np.int64)
+        # per-slot (start, end) prompt intervals of the chunk step in
+        # flight, set by step() before the dispatch and consumed by
+        # _account_decode + the post-step bookkeeping
+        self._step_chunks: Dict[int, Tuple[int, int]] = {}
+        # chunked prefill is gated per family (see CHUNKABLE_FAMILIES)
+        self.chunking = e.prefill_chunk > 0 and api.family in CHUNKABLE_FAMILIES
         # one jitted decode shared by every engine on the same ModelAPI
         # (a replica fleet compiles once, not once per replica). The
         # next-token argmax is fused in and the cache buffers are donated,
@@ -256,6 +349,63 @@ class ServingEngine:
 
             api._jit_decode = jax.jit(_decode_step, donate_argnums=(1,))
         self._decode = api._jit_decode
+        # the continuous-batching step: a masked scan over the chunk's
+        # token columns through the same family decode step — ONE jitted
+        # dispatch covers every prefill chunk and decode token of the step.
+        # Per column, prompt rows take their chunk token, decode rows take
+        # the fed-back next token; inactive rows keep their cache via a
+        # per-leaf where (batch axis 0 for 1-D leaves, else axis 1 — the
+        # same convention _write_slot relies on). ``emit`` marks the column
+        # whose argmax is a row's next fed token: column 0 for decode rows,
+        # the final-prompt-token column for a prompt that completes this
+        # step (its first generated token).
+        if not hasattr(api, "_jit_chunk_decode"):
+            chunk_serve = make_serve_step(api, vocab=self.cfg.vocab_size)
+
+            def _chunk_step(params, cache, nxt, tok, use_prompt, active, emit):
+                def col(carry, xs):
+                    cache, nxt = carry
+                    tok_c, up_c, act_c, em_c = xs
+                    t = jnp.where(up_c, tok_c, nxt)
+                    out, new_cache = chunk_serve(params, cache, t[:, None])
+
+                    def gate(new, old):
+                        if new.ndim == 1:
+                            return jnp.where(act_c, new, old)
+                        m = act_c.reshape((1, -1) + (1,) * (new.ndim - 2))
+                        return jnp.where(m, new, old)
+
+                    cache = jax.tree.map(gate, new_cache, cache)
+                    nxt = jnp.where(em_c, out[:, 0], nxt)
+                    return (cache, nxt), None
+
+                (cache, nxt), _ = jax.lax.scan(
+                    col, (cache, nxt), (tok.T, use_prompt.T, active.T, emit.T)
+                )
+                return nxt, cache
+
+            api._jit_chunk_decode = jax.jit(_chunk_step, donate_argnums=(1,))
+        self._chunk_decode = api._jit_chunk_decode
+        # slot-buffer donation across join/leave churn: the batched cache
+        # is threaded through jitted, donated updates — the whole-slot
+        # path's prefill copy-in and the chunked path's zero-reset both
+        # reuse the existing buffers instead of allocating per admit.
+        if not hasattr(api, "_jit_write_slot"):
+
+            def _write_slot_fn(dst, src, slot_idx):
+                return jax.tree.map(
+                    lambda d, s: _slot_put(d, s, slot_idx), dst, src
+                )
+
+            api._jit_write_slot = jax.jit(_write_slot_fn, donate_argnums=(0,))
+        self._write_slot_jit = api._jit_write_slot
+        if not hasattr(api, "_jit_reset_slot"):
+
+            def _reset_slot_fn(cache, slot_idx):
+                return jax.tree.map(lambda c: _slot_zero(c, slot_idx), cache)
+
+            api._jit_reset_slot = jax.jit(_reset_slot_fn, donate_argnums=(0,))
+        self._reset_slot_jit = api._jit_reset_slot
         self._rng = np.random.default_rng(seed)
         self._seed = seed
         # device-executed tiering: a device-resident near/far store whose
@@ -358,22 +508,72 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        # stamp arrival so TTFT covers queue wait, not just slot residency
+        self._enq_vt[req.rid] = self.now()
+        self._enq_wall[req.rid] = time.perf_counter()
         self.queue.append(req)
 
+    def _record_ttft(self, req: Request):
+        """First generated token exists for ``req`` — close its TTFT."""
+        t = self.now()
+        vt = t - self._enq_vt.pop(req.rid, t)
+        self.ttft_vt_samples.append(vt)
+        self.metrics.histogram("ttft", tenant=req.tenant).record(vt)
+        wall = self._enq_wall.pop(req.rid, None)
+        if wall is not None:
+            self.ttft_wall_samples.append(time.perf_counter() - wall)
+
+    def _admit_common(self, slot_idx: int, slot: _Slot, req: Request):
+        """Slot bookkeeping shared by both admission paths. Returns the
+        (truncated) prompt and the pagetable share record."""
+        budget = max(1, self.ecfg.max_len - 2)
+        tokens = req.tokens[:budget]
+        decode_len = max(1, min(req.decode_len, self.ecfg.max_len - len(tokens) - 1))
+        share = self.pagetable.add_sequence(req.rid, tokens)
+        self._m_prefill.inc(len(tokens))
+        self._m_prefill_saved.inc(share["shared"] * self.ecfg.page_size)
+        slot.seq_id = req.rid
+        slot.remaining = decode_len
+        slot.request = req
+        slot.t_admit = self.now()
+        slot.start_step = self.engine_steps
+        slot.chunk = None
+        slot.chunks_done = 0
+        self._tenant(req.tenant)  # register the tenant counter index
+        return tokens, share
+
     def _admit(self):
+        """Fill freed slots from the queue — called at the top of EVERY
+        step, so admission is continuous, not between-generations.
+
+        Whole-slot path (``prefill_chunk == 0`` or a non-chunkable family):
+        the prompt prefills monolithically through ``api.prefill`` — one
+        extra model dispatch per admit, charged to ``prefill_dispatches``.
+        Chunked path: admission only maps pages, zero-resets the slot's
+        cache rows (jitted, donated — no allocation), and arms a
+        ChunkState; the prompt tokens flow through the shared chunk-scan
+        dispatch of subsequent steps.
+        """
         for slot_idx, slot in enumerate(self.slots):
             if slot.active or not self.queue:
                 continue
             req = self.queue.popleft()
-            budget = max(1, self.ecfg.max_len - 2)
-            tokens = req.tokens[:budget]
-            decode_len = max(1, min(req.decode_len, self.ecfg.max_len - len(tokens) - 1))
-            share = self.pagetable.add_sequence(req.rid, tokens)
-            self._m_prefill.inc(len(tokens))
-            self._m_prefill_saved.inc(share["shared"] * self.ecfg.page_size)
-            # run the model prefill for this request into its slot
+            if self.chunking:
+                tokens, share = self._admit_common(slot_idx, slot, req)
+                self.cache = self._reset_slot_jit(
+                    self.cache, jnp.int32(slot_idx)
+                )
+                slot.chunk = ChunkState(tokens=tokens)
+                slot.shared_pages = share["shared"]
+                continue
+            tokens, share = self._admit_common(slot_idx, slot, req)
+            # run the model prefill for this request into its slot — a
+            # whole extra model dispatch outside the step's fused decode
+            # (what the chunked path folds away), counted honestly
             batch = self._prefill_batch(tokens)
             logits1, cache1 = self.api.prefill(self.params, batch, max_len=self.ecfg.max_len)
+            self.model_dispatches += 1
+            self.prefill_dispatches += 1
             self._write_slot(slot_idx, cache1, len(tokens))
             if self.tiered is not None:
                 # seed the device tier store with this sequence's page
@@ -383,15 +583,10 @@ class ServingEngine:
                 positions = [
                     min((i + 1) * ps, len(tokens)) - 1 for i in range(len(pages))
                 ]
-                self._tiered_write(cache1, [0] * len(pages), positions, pages)
+                self._tiered_write(self.cache, [slot_idx] * len(pages), positions, pages)
             nxt = int(jnp.argmax(logits1[0, -1, : self.cfg.vocab_size]))
             self.next_tokens = self.next_tokens.at[slot_idx].set(nxt)
-            slot.seq_id = req.rid
-            slot.remaining = decode_len
-            slot.request = req
-            slot.t_admit = self.now()
-            slot.start_step = self.engine_steps
-            self._tenant(req.tenant)  # register the tenant counter index
+            self._record_ttft(req)
             if self.recorder is not None:
                 # prefill is one batched pass at admit time: a zero-length
                 # span on the request's track, sized by its args
@@ -420,15 +615,45 @@ class ServingEngine:
 
     def _write_slot(self, slot_idx: int, cache1: dict, length: int):
         """Copy a batch-1 prefill cache into slot ``slot_idx`` of the batched
-        cache. Works on the cache pytree: batch axis differs per leaf family
-        (kv: axis 1; lengths: axis 0)."""
+        cache. Batch axis differs per leaf family (kv: axis 1; lengths:
+        axis 0 — the _slot_put convention). Runs through the jitted,
+        donated slot writer: the batched cache buffers are reused in place
+        across join/leave churn, and because ``api.prefill`` pads to
+        ``max_len`` the source shapes are fixed, so this compiles once per
+        family rather than once per prompt length."""
+        self.cache = self._write_slot_jit(self.cache, cache1, jnp.int32(slot_idx))
 
-        def put(dst, src):
-            if dst.ndim == 1:  # lengths
-                return dst.at[slot_idx].set(src[0])
-            return dst.at[:, slot_idx].set(src[:, 0])
-
-        self.cache = jax.tree.map(put, self.cache, cache1)
+    def _chunk_plan(self):
+        """Column plan for one continuous-batching step: (B, C) token ids
+        plus the use-prompt / active / emit masks the chunk scan consumes,
+        and the per-slot ``(start, end)`` prompt intervals this dispatch
+        advances. Decode slots occupy column 0 only; each prefilling slot
+        takes up to ``prefill_chunk`` prompt tokens and emits (captures its
+        first generated token) only in the column that consumes its final
+        prompt token."""
+        e = self.ecfg
+        C = e.prefill_chunk
+        B = e.max_batch
+        tok = np.zeros((B, C), np.int32)
+        use_prompt = np.zeros((B, C), bool)
+        active = np.zeros((B, C), bool)
+        emit = np.zeros((B, C), bool)
+        spans: Dict[int, Tuple[int, int]] = {}
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            if s.prefilling:
+                c = s.chunk.take(C)
+                n = len(c)
+                tok[i, :n] = c
+                use_prompt[i, :n] = True
+                active[i, :n] = True
+                emit[i, n - 1] = s.chunk.pos + n >= s.chunk.total
+                spans[i] = (s.chunk.pos, s.chunk.pos + n)
+            else:
+                active[i, 0] = True
+                emit[i, 0] = True
+        return tok, use_prompt, active, emit, spans
 
     # ------------------------------------------------------------------
     def _tenant(self, name: str) -> Dict[str, Counter]:
@@ -502,6 +727,9 @@ class ServingEngine:
             if d["near"] or d["far"]:
                 self.placement.stats.near_hits += d["near"]
                 self.placement.stats.far_hits += d["far"]
+                # per-role (decode/prefill) x (near/far) split: pure sums
+                # of the same hits, so the drain-cadence invariant holds
+                self.role_hits += np.asarray(d["role"], np.int64)
                 tenant_rows = d["tenant"]
                 for name, idx in self._tenant_index.items():
                     if idx < len(tenant_rows):
@@ -522,37 +750,53 @@ class ServingEngine:
         active slots' page ids go through ONE segmented tiered-gather
         dispatch, and the per-slot near/far hit counts accumulate into the
         store's device counter plane — no host sync here; the engine
-        drains the plane once per profiler window."""
+        drains the plane once per profiler window.
+
+        Under chunked prefill a prefilling slot's walk is truncated to the
+        pages whose KV content exists after this step's chunk (attention
+        masks the rest), and its segment carries ROLE_PREFILL into the
+        counter plane's role accumulator — the mixed prefill/decode
+        dispatch stays ONE kernel pass, roles ride alongside the segment
+        index exactly like tenant rows do."""
         segs = []
         for slot_idx, slot in enumerate(self.slots):
             if not slot.active:
                 continue
-            pages = np.array(self.pagetable.seqs[slot.seq_id], np.int64)
+            pages_all = self.pagetable.seqs[slot.seq_id]
+            role = ROLE_DECODE
+            if slot.prefilling and slot_idx in self._step_chunks:
+                end = self._step_chunks[slot_idx][1]
+                n_pages = -(-end // self.ecfg.page_size)
+                pages = np.array(pages_all[:n_pages], np.int64)
+                role = ROLE_PREFILL
+            else:
+                pages = np.array(pages_all, np.int64)
             if pages.size:
-                segs.append((slot_idx, slot, pages))
+                segs.append((slot_idx, slot, pages, role))
         if not segs:
             return
         segmented = self.tiered is not None and self.ecfg.segmented_lookup
         if segmented:
-            ids = np.concatenate([p for _, _, p in segs])
+            ids = np.concatenate([p for _, _, p, _ in segs])
             seg_of = np.repeat(
                 np.arange(len(segs), dtype=np.int32),
-                [p.size for _, _, p in segs],
+                [p.size for _, _, p, _ in segs],
             )
             rows = self.tiered.lookup_segments(
                 ids,
                 seg_of,
                 self.ecfg.max_batch + 1,  # last segment absorbs the padding
-                slot_idx=[i for i, _, _ in segs],
+                slot_idx=[i for i, _, _, _ in segs],
                 tenant_idx=[
-                    self._tenant_index[s.request.tenant] for _, s, _ in segs
+                    self._tenant_index[s.request.tenant] for _, s, _, _ in segs
                 ],
+                role_idx=[r for _, _, _, r in segs],
             )
             if self.ecfg.tiered_verify:
                 err = float(jnp.max(jnp.abs(rows - self.tiered.lookup_flat(ids))))
                 self.tiered_max_err = max(self.tiered_max_err, err)
         far_total = n_total = 0
-        for slot_idx, slot, pages in segs:
+        for slot_idx, slot, pages, _role in segs:
             far = self.placement.tier[pages] == 1
             far_total += int(far.sum())
             n_total += pages.size
@@ -585,8 +829,70 @@ class ServingEngine:
                 hook(pages, False)
         self.last_step_far_frac = far_total / n_total if n_total else 0.0
 
+    def _finish_chunk(self, slot_idx: int, slot: _Slot):
+        """Post-dispatch bookkeeping for one prefilling slot: advance the
+        chunk cursor, push the prompt pages this chunk completed through
+        the tiered write path (each page keyed by its last prefilled
+        token, exactly as the whole-slot admit seeds them), and — when
+        the final prompt token just landed — close TTFT: the emit column
+        captured the request's first generated token into next_tokens."""
+        start, end = self._step_chunks[slot_idx]
+        slot.chunk.pos = end
+        slot.chunks_done += 1
+        if self.tiered is not None:
+            pages = self.pagetable.seqs[slot.seq_id]
+            ps = self.ecfg.page_size
+            total = slot.chunk.total
+            w_pages: List[int] = []
+            w_pos: List[int] = []
+            for i, pid in enumerate(pages):
+                endpos = min((i + 1) * ps, total)
+                if start < endpos <= end:
+                    w_pages.append(pid)
+                    w_pos.append(endpos - 1)
+            if w_pages:
+                self._tiered_write(
+                    self.cache, [slot_idx] * len(w_pages), w_pos, w_pages
+                )
+        t = self.now()
+        if self.recorder is not None:
+            self.recorder.span(
+                "prefill_chunk",
+                slot.seq_id,
+                t,
+                t,
+                tenant=slot.request.tenant,
+                replica=self.host_rid,
+                tokens=end - start,
+                chunk=slot.chunks_done,
+            )
+        if slot.chunk.done:
+            prompt_tokens = slot.chunk.total
+            slot.chunk = None
+            self._record_ttft(slot.request)
+            if self.recorder is not None:
+                self.recorder.span(
+                    "prefill",
+                    slot.seq_id,
+                    slot.t_admit,
+                    t,
+                    tenant=slot.request.tenant,
+                    replica=self.host_rid,
+                    prompt_tokens=prompt_tokens,
+                    chunks=slot.chunks_done,
+                    shared_pages=slot.shared_pages,
+                )
+
     def step(self) -> int:
         """One engine iteration: admit -> decode -> account -> retire.
+
+        Continuous batching: ``_admit`` runs at the top of EVERY step, so
+        freed slots refill immediately. When any slot is mid-prefill the
+        step dispatches the chunk scan — prefill chunks and decode tokens
+        share ONE jitted executable (and one segmented tiered-gather pass
+        in ``_account_decode``); steady-state decode-only steps take the
+        plain fused (B, 1) decode. Either way: one model dispatch, zero
+        mandatory host syncs.
 
         Returns number of tokens decoded this step.
         """
@@ -594,11 +900,26 @@ class ServingEngine:
         active = [i for i, s in enumerate(self.slots) if s.active]
         if not active:
             return 0
-        # one fused dispatch: decode + next-token argmax, cache donated —
-        # tokens and cache stay on device, nothing reads back to host
-        self.next_tokens, self.cache = self._decode(
-            self.params, self.cache, self.next_tokens[:, None]
-        )
+        if any(s.prefilling for s in self.slots):
+            tok, use_prompt, act, emit, spans = self._chunk_plan()
+            self._step_chunks = spans
+            self.next_tokens, self.cache = self._chunk_decode(
+                self.params,
+                self.cache,
+                self.next_tokens,
+                jnp.asarray(tok),
+                jnp.asarray(use_prompt),
+                jnp.asarray(act),
+                jnp.asarray(emit),
+            )
+        else:
+            self._step_chunks = {}
+            # one fused dispatch: decode + next-token argmax, cache donated —
+            # tokens and cache stay on device, nothing reads back to host
+            self.next_tokens, self.cache = self._decode(
+                self.params, self.cache, self.next_tokens[:, None]
+            )
+        self.model_dispatches += 1
         self._account_decode()
         decoded = 0
         written: List[int] = []
@@ -608,6 +929,9 @@ class ServingEngine:
         written_seq: List[int] = []
         for slot_idx, slot in enumerate(self.slots):
             if not slot.active:
+                continue
+            if slot.prefilling:
+                self._finish_chunk(slot_idx, slot)
                 continue
             written.append(self.pagetable.append_token(slot.seq_id))
             written_tenant.append(slot.request.tenant)
@@ -725,6 +1049,17 @@ class ServingEngine:
             pages = self.pagetable.seqs.get(slot.seq_id, [])
             if not pages:
                 continue
+            if slot.prefilling:
+                # chunked prefill: the remaining chunk steps will read the
+                # not-yet-prefilled tail of the mapped chain — count those
+                # pages as upcoming readers so mid-prefill promotion is
+                # amortized over the chunks instead of waiting for counts
+                done = slot.chunk.pos // e.page_size
+                for p in pages[done:]:
+                    upcoming[p] = upcoming.get(p, 0) + 1
+                    if p not in seen:
+                        seen.add(p)
+                        preds.append(p)
             # the decode walk re-reads the WHOLE chain next step: chase one
             # predicted hop from every mapped page (promotes the far links
             # of a newly hot template chain the moment its head is seen),
@@ -750,8 +1085,15 @@ class ServingEngine:
             )
             if pid is None or self.pagetable.pages[pid].ref <= 0:
                 continue
+            # chase the WHOLE template chain from the successor table, not
+            # just prefetch_lookahead hops: a queued request's first full
+            # prefix page names its template, and under chunked prefill the
+            # promotion cost is amortized over the prefill chunk steps that
+            # will read the chain page by page
             chain = [int(pid)] + self.prefetch.predict_chain(
-                int(pid), stream=-1, lookahead=e.prefetch_lookahead
+                int(pid),
+                stream=-1,
+                lookahead=max(e.prefetch_lookahead, e.max_len // e.page_size),
             )
             for p in chain:
                 if not 0 <= p < e.n_pages:
@@ -835,11 +1177,21 @@ class ServingEngine:
         """Pending work in token-equivalents (admission's backlog estimate).
 
         ``prefill_weight`` discounts queued prompt tokens the same way the
-        caller's SLO cost model does (prefill is one batched pass, decode
-        is one slot-step per token).
+        caller's SLO cost model does. Chunk-aware: a prefilling slot owes
+        its REMAINING chunk tokens (weighted like queued prompt work — it
+        occupies chunk columns, not admit-time passes), not the whole
+        prompt, so AdmissionController.pressure and elastic scaling don't
+        over-shed mid-prefill under chunked prefill.
         """
         q = sum(prefill_weight * len(r.tokens) + r.decode_len for r in self.queue)
-        return q + sum(s.remaining for s in self.slots if s.active)
+        a = 0.0
+        for s in self.slots:
+            if not s.active:
+                continue
+            a += s.remaining
+            if s.prefilling:
+                a += prefill_weight * s.chunk.remaining
+        return q + a
 
     def apply_placement(self, near_ids: np.ndarray) -> int:
         """Push an externally-planned near-tier set (fleet autotier).
@@ -902,8 +1254,8 @@ class ServingEngine:
         ps = self.prefetch.finalized_stats()
         device = None
         self.drain_tier_counters()
+        steps = max(self.engine_steps, 1)
         if self.tiered is not None:
-            steps = max(self.engine_steps, 1)
             device = {
                 **self.tiered.stats(),
                 "max_read_error": self.tiered_max_err,
@@ -911,9 +1263,28 @@ class ServingEngine:
                 # 1 dispatch and (1/placement_window) syncs per step
                 "dispatches_per_step": self.tiered.dispatches / steps,
                 "host_syncs_per_step": self.tiered.host_syncs / steps,
+                # role split of the same tier hits (drained from the
+                # counter plane's role accumulator)
+                "decode_near_hits": int(self.role_hits[ROLE_DECODE, 0]),
+                "decode_far_hits": int(self.role_hits[ROLE_DECODE, 1]),
+                "prefill_near_hits": int(self.role_hits[ROLE_PREFILL, 0]),
+                "prefill_far_hits": int(self.role_hits[ROLE_PREFILL, 1]),
             }
+        tv = self.ttft_vt_samples
         return {
             "device_tiering": device,
+            "serving": {
+                # honest model-dispatch books: chunked prefill holds
+                # model_dispatches == engine_steps (prefill folded into
+                # the step's one executable); the whole-slot path pays
+                # prefill_dispatches extra launches on top
+                "model_dispatches": self.model_dispatches,
+                "prefill_dispatches": self.prefill_dispatches,
+                "model_dispatches_per_step": self.model_dispatches / steps,
+                "ttft_p50": float(np.percentile(tv, 50)) if tv else 0.0,
+                "ttft_p99": float(np.percentile(tv, 99)) if tv else 0.0,
+                "ttft_count": len(tv),
+            },
             "tokens_decoded": self.tokens_decoded,
             "requests_finished": len(self.finished),
             "prefill_tokens": self.prefill_tokens,

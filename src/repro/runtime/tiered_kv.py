@@ -56,15 +56,23 @@ from repro.kernels.tiered_gather.ops import (
 NEAR, FAR = 0, 1
 _QMAX = 127.0
 
+# segment roles for mixed prefill/decode dispatches (continuous batching):
+# the engine tags every segment with the phase of work it carries, and the
+# counter plane keeps a (role, tier) accumulator next to slot/tenant ones
+ROLE_DECODE, ROLE_PREFILL = 0, 1
+N_ROLES = 2
+
 
 @functools.partial(jax.jit, static_argnames=())
-def _plane_add(ctr_slot, ctr_tenant, ctr_total, hits, slot_vec, tenant_vec):
+def _plane_add(ctr_slot, ctr_tenant, ctr_role, ctr_total, hits, slot_vec,
+               tenant_vec, role_vec):
     """Fold one dispatch's per-segment hit pairs into the counter plane —
     pure device arithmetic, no host sync. Padded segments carry zero hits,
     so scatter-adding them anywhere is a no-op."""
     return (
         ctr_slot.at[slot_vec].add(hits),
         ctr_tenant.at[tenant_vec].add(hits),
+        ctr_role.at[role_vec].add(hits),
         ctr_total + hits.sum(axis=0),
     )
 
@@ -135,6 +143,11 @@ class TieredKVCache:
         # grow on demand and are only read by drain_counters().
         self.ctr_slot = jnp.zeros((int(counter_slots), 2), jnp.int32)
         self.ctr_tenant = jnp.zeros((0, 2), jnp.int32)
+        # per-ROLE accumulator: row 0 = decode segments, row 1 = prefill
+        # chunks — the continuous-batching step carries a role alongside
+        # each segment index so mixed prefill/decode dispatches stay
+        # attributable without a second kernel pass
+        self.ctr_role = jnp.zeros((N_ROLES, 2), jnp.int32)
         self.ctr_total = jnp.zeros((2,), jnp.int32)
         self._plane_dirty = False
 
@@ -257,15 +270,20 @@ class TieredKVCache:
         self.ctr_tenant = grow(self.ctr_tenant, int(n_tenants))
 
     def lookup_segments(self, page_ids, seg_of, n_segments: int,
-                        slot_idx=None, tenant_idx=None):
+                        slot_idx=None, tenant_idx=None, role_idx=None):
         """Step-wide ragged gather: ONE kernel dispatch, ZERO host syncs.
 
         ``page_ids`` concatenates every segment's pages; ``seg_of`` assigns
         each gather to a segment in [0, n_segments - 1) — the last segment
         index is reserved for shape-bucketing padding and its counts are
-        discarded. ``slot_idx``/``tenant_idx`` (one index per real segment)
-        route the per-segment (near, far) hit pairs into the device counter
-        plane, where they accumulate until :meth:`drain_counters`.
+        discarded. ``slot_idx``/``tenant_idx``/``role_idx`` (one index per
+        real segment) route the per-segment (near, far) hit pairs into the
+        device counter plane, where they accumulate until
+        :meth:`drain_counters`. ``role_idx`` carries the segment's phase
+        (ROLE_DECODE / ROLE_PREFILL) so a continuous-batching step that
+        mixes decode walks with prefill-chunk reads in the SAME dispatch
+        stays attributable per phase; omitted, every segment charges the
+        decode row.
 
         Returns the gathered rows (N, D) f32 — a device array; the hit
         counters never touch the host here.
@@ -298,15 +316,20 @@ class TieredKVCache:
         k = live.shape[0]
         slot_vec = np.zeros(k, np.int32)
         tenant_vec = np.zeros(k, np.int32)
+        role_vec = np.zeros(k, np.int32)  # default: everything is decode
         if slot_idx is not None:
             slot_vec[: len(slot_idx)] = np.asarray(slot_idx, np.int32)
         if tenant_idx is not None:
             tenant_vec[: len(tenant_idx)] = np.asarray(tenant_idx, np.int32)
+        if role_idx is not None:
+            role_vec[: len(role_idx)] = np.asarray(role_idx, np.int32)
+            assert role_vec.min() >= 0 and role_vec.max() < N_ROLES, role_vec
         self.ensure_counter_plane(int(slot_vec.max(initial=-1)) + 1,
                                   int(tenant_vec.max(initial=-1)) + 1)
-        self.ctr_slot, self.ctr_tenant, self.ctr_total = _plane_add(
-            self.ctr_slot, self.ctr_tenant, self.ctr_total,
+        self.ctr_slot, self.ctr_tenant, self.ctr_role, self.ctr_total = _plane_add(
+            self.ctr_slot, self.ctr_tenant, self.ctr_role, self.ctr_total,
             live, jnp.asarray(slot_vec), jnp.asarray(tenant_vec),
+            jnp.asarray(role_vec),
         )
         self._plane_dirty = True
         self.lookups += 1
@@ -326,13 +349,17 @@ class TieredKVCache:
                 "far": 0,
                 "slot": np.zeros((self.ctr_slot.shape[0], 2), np.int64),
                 "tenant": np.zeros((self.ctr_tenant.shape[0], 2), np.int64),
+                "role": np.zeros((N_ROLES, 2), np.int64),
             }
-        slot_c, tenant_c, total = (
+        slot_c, tenant_c, role_c, total = (
             np.asarray(x, np.int64)
-            for x in jax.device_get((self.ctr_slot, self.ctr_tenant, self.ctr_total))
+            for x in jax.device_get(
+                (self.ctr_slot, self.ctr_tenant, self.ctr_role, self.ctr_total)
+            )
         )
         self.ctr_slot = jnp.zeros_like(self.ctr_slot)
         self.ctr_tenant = jnp.zeros_like(self.ctr_tenant)
+        self.ctr_role = jnp.zeros_like(self.ctr_role)
         self.ctr_total = jnp.zeros_like(self.ctr_total)
         self._plane_dirty = False
         n, f = int(total[0]), int(total[1])
@@ -340,7 +367,8 @@ class TieredKVCache:
         self.far_hits += f
         self.host_syncs += 1
         self.drains += 1
-        return {"near": n, "far": f, "slot": slot_c, "tenant": tenant_c}
+        return {"near": n, "far": f, "slot": slot_c, "tenant": tenant_c,
+                "role": role_c}
 
     def lookup_flat(self, page_ids):
         """The legacy flat-buffer gather (baseline + differential oracle)."""

@@ -267,3 +267,86 @@ def test_counter_rows_deterministic_and_keyed():
     big = counter_rows(7, np.arange(64), np.zeros(64), 128)
     assert abs(float(big.mean())) < 0.05
     assert abs(float(big.std()) - 1.0) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# 5. continuous batching keeps (and extends) the budget
+
+
+def test_chunked_prefill_one_dispatch_per_step(monkeypatch):
+    """Chunked prefill folds prompt work into the step's ONE tiered
+    dispatch and ONE model executable: mixed prefill/decode steps never
+    add kernel launches, and api.prefill is never dispatched at all."""
+    calls = []
+    orig_seg = tiered_kv_mod.tiered_lookup_segments
+
+    def seg(*a, **k):
+        calls.append("seg")
+        return orig_seg(*a, **k)
+
+    monkeypatch.setattr(tiered_kv_mod, "tiered_lookup_segments", seg)
+    cfg, eng = _mk_engine(True, prefill_chunk=8)
+    assert eng.chunking
+    gen = _gen(cfg)
+    for _ in range(6):
+        eng.submit(next(gen))
+    mixed_steps = 0
+    while (eng.queue or any(s.active for s in eng.slots)) and eng.engine_steps < 200:
+        before = len(calls)
+        prefilling = any(s.prefilling for s in eng.slots) or bool(eng.queue)
+        eng.step()
+        assert len(calls) - before == 1, (len(calls) - before)
+        if prefilling and sum(1 for s in eng.slots if s.active) > 1:
+            mixed_steps += 1
+    assert mixed_steps > 0, "workload never mixed prefill with decode"
+    sv = eng.stats()["serving"]
+    # honest model-dispatch books: prefill rode the step executable
+    assert sv["prefill_dispatches"] == 0
+    assert sv["model_dispatches"] == eng.engine_steps
+    assert eng.tiered.dispatches == eng.engine_steps
+
+
+def test_whole_slot_prefill_dispatches_counted():
+    """The whole-slot path's per-admit api.prefill launches are now on the
+    books: one prefill dispatch per admitted request, each a model
+    dispatch OUTSIDE the per-step budget."""
+    cfg, eng = _mk_engine(True)
+    gen = _gen(cfg)
+    n = 6
+    stats = eng.run(gen, n_requests=n, max_steps=200)
+    sv = stats["serving"]
+    assert sv["prefill_dispatches"] == n
+    assert sv["model_dispatches"] == eng.engine_steps + n
+    assert sv["model_dispatches_per_step"] > 1.0
+
+
+def test_chunked_drain_cadence_equivalence():
+    """Drain-cadence bit-exactness extends to chunked prefill AND the new
+    per-role (decode/prefill x near/far) books: per-step drains vs
+    windowed drains charge identical totals."""
+    engines = []
+    for _ in range(2):
+        cfg, e = _mk_engine(True, prefill_chunk=8)
+        gen = _gen(cfg, seed=5)
+        for _ in range(6):
+            e.submit(next(gen))
+        engines.append(e)
+    windowed, every_step = engines
+    while (windowed.queue or any(s.active for s in windowed.slots)) and windowed.engine_steps < 200:
+        windowed.step()
+        every_step.step()
+        every_step.drain_tier_counters()
+    sw, se = windowed.stats(), every_step.stats()
+    assert sw["tenants"] == se["tenants"]
+    assert sw["near_hit_rate"] == se["near_hit_rate"]
+    dw, de = sw["device_tiering"], se["device_tiering"]
+    assert (dw["near_hits"], dw["far_hits"]) == (de["near_hits"], de["far_hits"])
+    np.testing.assert_array_equal(windowed.role_hits, every_step.role_hits)
+    # the role plane split the same hits the totals counted — nothing
+    # double-charged, nothing lost — and prefill-role hits actually flowed
+    for eng, d in ((windowed, dw), (every_step, de)):
+        assert int(eng.role_hits.sum()) == d["near_hits"] + d["far_hits"]
+        assert int(eng.role_hits[:, 0].sum()) == d["near_hits"]
+        assert d["prefill_near_hits"] + d["prefill_far_hits"] > 0
+        assert d["decode_near_hits"] + d["decode_far_hits"] > 0
+    assert de["drains"] > dw["drains"]
