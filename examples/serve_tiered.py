@@ -33,6 +33,26 @@ books bit-identically to per-step charging. benchmarks/decode_dispatch_bench.py
 measures the budget: 1 dispatch + ~1/window syncs per step vs ~slots of
 each on the retired per-slot path (``EngineConfig.segmented_lookup=False``).
 
+Sharded serving: ``EngineConfig.model_shards=N`` (with N devices visible —
+CPU-testable under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+swaps in ``runtime/sharded.ShardedServingEngine``: ONE logical replica
+spanning chips. Parameters are tensor-sharded over the ``model`` axis of a
+serving mesh at placement time (``launch.mesh.shard_model_params``), and
+the KV store becomes page-interleaved per-shard ``TieredKVCache`` slices
+(shard ``s`` owns pages with ``pid % N == s``), each shard with near
+capacity ``min(pages_owned, global_near_capacity)`` so the planner's
+global near set always lands intact. The step budget is unchanged in
+shape — at most ONE segmented tiered-gather dispatch per shard per step
+(a shard outside the step's page walk pays zero) and ZERO mandatory host
+syncs. Per-shard drain/merge contract: each shard's counter plane drains
+independently once per profiler window and merges by PURE SUMMATION into
+the replica's placement stats, tenant books, role split and MemProf
+export — every page is counted by exactly one shard, so the merged books
+are bit-identical to the unsharded engine's at any drain cadence, and the
+shard-labeled ``shard_near_hits{shard=s}`` flight-recorder rows sum back
+to the replica totals. A 1-shard mesh IS today's engine, bit for bit
+(tokens, counters, tenant books — tests/test_sharded.py).
+
 Continuous batching + chunked prefill: set ``EngineConfig.prefill_chunk``
 to a positive token budget (e.g. 16) and the step becomes a vLLM-style
 continuous-batching step — freed slots are refilled EVERY step and prompts

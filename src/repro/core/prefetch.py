@@ -49,9 +49,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, Hashable, Iterable, List, Optional, Tuple
+import types
+from typing import Dict, Hashable, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+# buffer/table partition for streams with no tenant attached (standalone
+# engines, benchmarks, direct scoring runs): everything shares one slice,
+# which is exactly the pre-partition behavior
+DEFAULT_PARTITION = ""
 
 
 @dataclasses.dataclass
@@ -161,15 +167,67 @@ def train_successors(
     return table
 
 
+def train_tenant_successors(
+    windows: Iterable,
+    stream_tenants: Dict[int, str],
+    min_count: int = 2,
+    min_frac: float = 0.3,
+    max_successors: int = 2,
+    default: str = DEFAULT_PARTITION,
+) -> Dict[str, Dict[int, Tuple[int, ...]]]:
+    """Tenant-partitioned successor training: ``{tenant: {block: (succ,)}}``.
+
+    ``stream_tenants`` maps stream ids (engine seq ids, possibly
+    rid-namespaced by the fleet aggregator) to tenant names; streams with
+    no mapping train the ``default`` partition. Each window's accesses are
+    split by their stream's tenant BEFORE training, so one tenant's
+    template chains never enter another tenant's table — the table-side
+    half of the isolation whose buffer-side half is the PrefetchEngine's
+    fair-share partition eviction. Transitions stay per stream inside each
+    partition exactly as in :func:`train_successors`; empty partitions are
+    dropped.
+    """
+    by_tenant: Dict[str, list] = {}
+    for w in windows:
+        blk = np.asarray(w.blocks, np.int64).reshape(-1)
+        if blk.size == 0:
+            continue
+        sid = getattr(w, "stream", None)
+        s = (
+            np.zeros(blk.size, np.int64)
+            if sid is None
+            else np.asarray(sid, np.int64).reshape(-1)
+        )
+        uniq = np.unique(s)
+        tenants = np.array([stream_tenants.get(int(u), default) for u in uniq])
+        for t in set(tenants.tolist()):
+            m = np.isin(s, uniq[tenants == t])
+            by_tenant.setdefault(t, []).append(
+                types.SimpleNamespace(blocks=blk[m], stream=s[m])
+            )
+    out: Dict[str, Dict[int, Tuple[int, ...]]] = {}
+    for t, ws in by_tenant.items():
+        table = train_successors(
+            ws, min_count=min_count, min_frac=min_frac, max_successors=max_successors
+        )
+        if table:
+            out[t] = table
+    return out
+
+
 class PrefetchEngine:
     def __init__(self, predictor: str = "nextline", buffer_blocks: int = 64, degree: int = 2):
         assert predictor in ("nextline", "stride", "markov", "trace", "off")
         self.predictor = predictor
-        # PENDING prefetches (LRU). An entry is consumed by the demand
-        # access it covers — one prefetch pays for one miss, as in any
-        # hardware stream buffer — or wasted: LRU-evicted, evicted with a
-        # tier demotion, or still resident at finalize.
-        self.buffer = collections.OrderedDict()
+        # PENDING prefetches (LRU, insertion-ordered; value = the tenant
+        # partition that issued the entry). An entry is consumed by the
+        # demand access it covers — one prefetch pays for one miss, as in
+        # any hardware stream buffer — or wasted: evicted by its own
+        # partition's overflow, evicted with a tier demotion, or still
+        # resident at finalize. Overflow eviction is FAIR-SHARE per
+        # partition (see _evict_overflow): a tenant under its share is
+        # never evicted by another tenant's flood.
+        self.buffer: "collections.OrderedDict[int, str]" = collections.OrderedDict()
         self.capacity = buffer_blocks
         self.degree = degree
         self.stats = PrefetchStats()
@@ -180,11 +238,24 @@ class PrefetchEngine:
         self._markov: dict[int, collections.Counter] = collections.defaultdict(
             collections.Counter
         )
-        # trace predictor: the trained successor table (load_successors)
-        self._successors: Dict[int, Tuple[int, ...]] = {}
+        # trace predictor: trained successor tables, one per tenant
+        # partition ({partition: {block: (succ, ...)}}). Flat (legacy)
+        # tables live in the default partition — the ``_successors``
+        # property below — so single-tenant callers see the old shape.
+        self._tables: Dict[str, Dict[int, Tuple[int, ...]]] = {}
+        # stream id -> tenant partition (set by the serving engine at
+        # admit); unmapped streams use DEFAULT_PARTITION
+        self._stream_part: Dict[Hashable, str] = {}
+        # live pending-entry count per partition (fair-share accounting)
+        self._part_sizes: Dict[str, int] = {}
         # cached numpy view of buffer keys for vectorized membership probes;
         # None -> stale (rebuilt lazily after inserts/evictions)
         self._buf_keys: Optional[np.ndarray] = None
+
+    @property
+    def _successors(self) -> Dict[int, Tuple[int, ...]]:
+        """The default partition's successor table (legacy flat view)."""
+        return self._tables.setdefault(DEFAULT_PARTITION, {})
 
     # ------------------------------------------------------------------
     def _stream(self, sid: Hashable) -> _StreamState:
@@ -196,23 +267,51 @@ class PrefetchEngine:
     def drop_stream(self, sid: Hashable):
         """Forget a finished stream's training tail (slot retirement)."""
         self._streams.pop(sid, None)
+        self._stream_part.pop(sid, None)
 
-    def load_successors(self, table: Dict[int, Tuple[int, ...]], merge: bool = False):
-        """Install a trained successor table (fleet push or local training).
+    def set_stream_partition(self, sid: Hashable, partition: str):
+        """Bind a stream to a tenant partition: its pending prefetches
+        charge that partition's buffer share and its trace predictions
+        come from that partition's table."""
+        self._stream_part[sid] = str(partition)
 
-        ``merge=False`` replaces wholesale — the fleet table is trained on
-        strictly more data than any local one; ``merge=True`` keeps local
-        entries the incoming table lacks.
+    def _partition_of(self, sid: Hashable) -> str:
+        return self._stream_part.get(sid, DEFAULT_PARTITION)
+
+    def load_successors(
+        self,
+        table: Union[Dict[int, Tuple[int, ...]], Dict[str, Dict[int, Tuple[int, ...]]]],
+        merge: bool = False,
+    ):
+        """Install trained successor tables (fleet push or local training).
+
+        ``table`` is either tenant-partitioned (``{tenant: {block:
+        (succ,)}}`` — the fleet/TierEpoch shape) or flat (``{block:
+        (succ,)}`` — legacy single-tenant callers; installed into the
+        default partition). ``merge=False`` replaces wholesale — the fleet
+        table is trained on strictly more data than any local one;
+        ``merge=True`` keeps local entries the incoming tables lack,
+        per partition.
         """
+        nested = bool(table) and all(isinstance(v, dict) for v in table.values())
+        incoming = (
+            {str(t): dict(tb) for t, tb in table.items()}
+            if nested
+            else {DEFAULT_PARTITION: dict(table)}
+        )
         if merge:
-            merged = dict(self._successors)
-            merged.update(table)
-            self._successors = merged
+            for part, tb in incoming.items():
+                self._tables.setdefault(part, {}).update(tb)
+        elif nested:
+            self._tables = incoming
         else:
-            self._successors = dict(table)
+            # legacy flat replace touches only the default partition
+            self._tables[DEFAULT_PARTITION] = incoming[DEFAULT_PARTITION]
 
     # ------------------------------------------------------------------
-    def _predict(self, block: int, st: _StreamState) -> list[int]:
+    def _predict(
+        self, block: int, st: _StreamState, part: str = DEFAULT_PARTITION
+    ) -> list[int]:
         if self.predictor == "off":
             return []
         if self.predictor == "nextline":
@@ -224,8 +323,10 @@ class PrefetchEngine:
             # the training traces put b -> b+1 into the table on their own,
             # so nextline behavior emerges exactly where traces support it —
             # and nowhere else, which is what keeps wasted bandwidth at or
-            # below the hardware-style baselines (fig21/fig22's criterion)
-            return list(self._successors.get(block, ())[: self.degree])
+            # below the hardware-style baselines (fig21/fig22's criterion).
+            # Partitioned: a stream only ever chases ITS tenant's table.
+            table = self._tables.get(part, ())
+            return list(table.get(block, ())[: self.degree]) if table else []
         succ = self._markov.get(block)
         if not succ:
             return []
@@ -240,20 +341,29 @@ class PrefetchEngine:
             if c >= 2 and c / total >= 0.5
         ]
 
-    def predict_chain(self, block: int, stream: Hashable = 0, lookahead: int = 4) -> list[int]:
+    def predict_chain(
+        self,
+        block: int,
+        stream: Hashable = 0,
+        lookahead: int = 4,
+        partition: Optional[str] = None,
+    ) -> list[int]:
         """Walk the predictor ``lookahead`` transitions ahead of ``block``.
 
         Pure prediction — no training, no buffer effects. This is the
         serving engine's issue window: chase the successor chain (or
         stride/nextline extrapolation) and return candidate blocks in
-        predicted-access order, deduplicated, cycles cut.
+        predicted-access order, deduplicated, cycles cut. ``partition``
+        overrides the stream's tenant partition — used for queued requests
+        whose stream does not exist yet but whose tenant is known.
         """
         st = self._streams.get(stream, _StreamState())
+        part = self._partition_of(stream) if partition is None else str(partition)
         out: list[int] = []
         seen = {int(block)}
         cur = int(block)
         for _ in range(max(0, int(lookahead))):
-            preds = [p for p in self._predict(cur, st) if p >= 0]
+            preds = [p for p in self._predict(cur, st, part) if p >= 0]
             if not preds:
                 break
             for p in preds:
@@ -277,31 +387,68 @@ class PrefetchEngine:
             self._buf_keys = np.fromiter(self.buffer.keys(), np.int64, len(self.buffer))
         return self._buf_keys
 
-    def _insert(self, block: int):
+    def _dec_part(self, part: str):
+        n = self._part_sizes.get(part, 0) - 1
+        if n > 0:
+            self._part_sizes[part] = n
+        else:
+            self._part_sizes.pop(part, None)
+
+    def _evict_overflow(self, part: str):
+        """Fair-share partition eviction on buffer overflow.
+
+        The inserting partition pays when it is over its fair share
+        (capacity / live partitions); otherwise the LARGEST over-share
+        partition pays. Either way the victim partition loses its OLDEST
+        pending entry. The invariant this buys: a tenant at or under its
+        fair share is never evicted by another tenant's prediction flood —
+        the cross-tenant interference the shared LRU used to allow.
+        """
+        fair = self.capacity / max(1, len(self._part_sizes))
+        victim_part = part
+        if self._part_sizes.get(part, 0) <= fair:
+            victim_part = max(self._part_sizes, key=lambda p: self._part_sizes[p])
+        victim = next(b for b, p in self.buffer.items() if p == victim_part)
+        del self.buffer[victim]
+        self._dec_part(victim_part)
+        self.stats.unused_evicted += 1
+
+    def _insert(self, block: int, part: str = DEFAULT_PARTITION):
         if block in self.buffer:
             return
         self.stats.total_prefetched += 1
-        self.buffer[block] = True
+        self.buffer[block] = part
+        self._part_sizes[part] = self._part_sizes.get(part, 0) + 1
         self._buf_keys = None
         if len(self.buffer) > self.capacity:
-            self.buffer.popitem(last=False)
-            self.stats.unused_evicted += 1
+            self._evict_overflow(part)
 
     def _consume(self, block: int):
         """A demand access lands on a pending prefetch: that prefetch is
         spent (covered one miss — the block is resident/near now, and its
         later accesses are the tier books' business, not ours)."""
-        self.buffer.pop(block)
+        self._dec_part(self.buffer.pop(block))
         self.stats.used_prefetches += 1
         self._buf_keys = None
 
-    def mark_prefetched(self, blocks) -> int:
+    def mark_prefetched(self, blocks, partitions=None) -> int:
         """Charge externally executed prefetches (the serving engine's
-        far->near page promotions) to the books and track their use."""
+        far->near page promotions) to the books and track their use.
+        ``partitions`` is one partition name for all blocks, or a sequence
+        aligned with ``blocks``; omitted, entries land in the default
+        partition."""
+        b = np.asarray(blocks, np.int64).reshape(-1)
+        if partitions is None:
+            parts: Sequence[str] = [DEFAULT_PARTITION] * b.size
+        elif isinstance(partitions, str):
+            parts = [partitions] * b.size
+        else:
+            parts = [str(p) for p in partitions]
+            assert len(parts) == b.size, (len(parts), b.size)
         n = 0
-        for b in np.asarray(blocks, np.int64).reshape(-1):
-            if int(b) not in self.buffer:
-                self._insert(int(b))
+        for blk, part in zip(b.tolist(), parts):
+            if int(blk) not in self.buffer:
+                self._insert(int(blk), part)
                 n += 1
         return n
 
@@ -310,7 +457,9 @@ class PrefetchEngine:
         tier before any access needed them): pure wasted bandwidth."""
         evicted = 0
         for b in np.asarray(blocks, np.int64).reshape(-1):
-            if self.buffer.pop(int(b), None) is not None:
+            part = self.buffer.pop(int(b), None)
+            if part is not None:
+                self._dec_part(part)
                 evicted += 1
                 self.stats.unused_evicted += 1
         if evicted:
@@ -331,6 +480,7 @@ class PrefetchEngine:
         """Teardown: flush the buffer, charging pending entries for real."""
         self.stats.unused_evicted += len(self.buffer)
         self.buffer.clear()
+        self._part_sizes.clear()
         self._buf_keys = None
         return self.stats
 
@@ -360,9 +510,10 @@ class PrefetchEngine:
                 self._markov[st.last][block] += 1
         st.last = block
         st.tail = None  # scalar access invalidates the batch-walk cache
-        for p in self._predict(block, st):
+        part = self._partition_of(stream)
+        for p in self._predict(block, st, part):
             if 0 <= p:
-                self._insert(p)
+                self._insert(p, part)
         return covered
 
     def access_many(self, blocks, far_mask, stream: Hashable = 0) -> int:
@@ -426,8 +577,9 @@ class PrefetchEngine:
             st.stride = d or st.stride
         st.last = int(new[-1])
         # --- issue for the newly advanced blocks only
+        part = self._partition_of(stream)
         for blk in new.tolist():
-            for p in self._predict(int(blk), st):
+            for p in self._predict(int(blk), st, part):
                 if 0 <= p:
-                    self._insert(p)
+                    self._insert(p, part)
         return covered

@@ -151,7 +151,16 @@ def build_fleet(
 
     def make_replica(rid: int, speed: float = 1.0) -> Replica:
         p = params_source() if params_source is not None else params
-        eng = ServingEngine(api, p, EngineConfig(**kw), seed=seed + rid)
+        ecfg = EngineConfig(**kw)
+        if ecfg.model_shards > 1:
+            # one LOGICAL replica spanning chips: still one routing target,
+            # one profile export, one tenant book — the shards are invisible
+            # to the router and merge by summation everywhere above this
+            from repro.runtime.sharded import ShardedServingEngine
+
+            eng = ShardedServingEngine(api, p, ecfg, seed=seed + rid)
+        else:
+            eng = ServingEngine(api, p, ecfg, seed=seed + rid)
         return Replica(rid, eng, live_cache_blocks, speed=speed)
 
     replicas = [

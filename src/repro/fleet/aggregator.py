@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core import distribution
 from repro.core.memtrace import TraceWindow, validate_trace
-from repro.core.prefetch import train_successors
+from repro.core.prefetch import train_tenant_successors
 from repro.fleet.replica import Replica, ReplicaProfile
 from repro.obs import MetricSnapshot, merge_snapshots
 
@@ -128,8 +128,9 @@ def train_fleet_successors(
     min_count: int = 2,
     min_frac: float = 0.3,
     max_successors: int = 2,
-) -> dict:
-    """Train ONE successor table from every host's trace windows.
+) -> Dict[str, Dict[int, tuple]]:
+    """Train TENANT-PARTITIONED successor tables from every host's windows:
+    ``{tenant: {block: (succ, ...)}}``.
 
     This is the paper's point in acting form: the fleet tracing tool
     exists to drive better prefetchers. Blocks stay in the shared LOGICAL
@@ -141,9 +142,19 @@ def train_fleet_successors(
     per-stream model exists to kill). Pooling windows and retraining beats
     merging the per-host ``ReplicaProfile.successors`` tables: counts from
     different hosts reinforce each other through the confidence gates.
+
+    Partitioning rides each profile's ``stream_tenants`` map (seq id ->
+    tenant, rid-namespaced here to match the pooled streams): one tenant's
+    template chains train ONLY that tenant's table, so a pushed fleet table
+    can never flood a neighbor tenant's pending prefetches out of the
+    partitioned prefetch buffer. Streams with no tenant mapping (legacy
+    profiles) train the default ``""`` partition.
     """
     tagged = []
+    stream_tenants: Dict[int, str] = {}
     for p in profiles:
+        for sid, t in getattr(p, "stream_tenants", {}).items():
+            stream_tenants[int(sid) + p.rid * _STREAM_STRIDE] = t
         for w in p.windows:
             s = (
                 w.stream
@@ -153,8 +164,9 @@ def train_fleet_successors(
             tagged.append(
                 TraceWindow(w.start_step, w.blocks, w.is_write, s + p.rid * _STREAM_STRIDE)
             )
-    return train_successors(
-        tagged, min_count=min_count, min_frac=min_frac, max_successors=max_successors
+    return train_tenant_successors(
+        tagged, stream_tenants,
+        min_count=min_count, min_frac=min_frac, max_successors=max_successors,
     )
 
 

@@ -68,10 +68,21 @@ class TierEpoch:
     # plan is a drain boundary — so these never lag the plan's inputs
     device_dispatches: int = 0
     device_host_syncs: int = 0
-    # fleet-trained prefetch successor table pushed alongside the near set
-    # ({block: (succ, ...)}): the trace-driven prefetcher's fleet plane —
-    # sequences learned on any host prefetch for all of them
-    prefetch_table: Dict[int, tuple] = dataclasses.field(default_factory=dict)
+    # fleet-trained prefetch successor tables pushed alongside the near
+    # set, TENANT-PARTITIONED ({tenant: {block: (succ, ...)}}): the
+    # trace-driven prefetcher's fleet plane — sequences learned on any host
+    # prefetch for all of them, but only within their own tenant's
+    # partition, so one tenant's template chains cannot evict another
+    # tenant's pending prefetches on the hosts the push lands on
+    prefetch_table: Dict[str, Dict[int, tuple]] = dataclasses.field(
+        default_factory=dict
+    )
+    # per-shard near-tier capacity of each sharded host at plan time
+    # ({rid: (cap_shard0, cap_shard1, ...)}): a sharded replica's near tier
+    # is the UNION of its shards' slices, and the planner's near set lands
+    # on each shard restricted to the pages that shard owns — these are the
+    # per-shard ceilings that restriction is guaranteed to fit under
+    shard_near_capacity: Dict[int, tuple] = dataclasses.field(default_factory=dict)
 
 
 class AutoTierer:
@@ -138,6 +149,11 @@ class AutoTierer:
         # hosts and would inflate the budget for the rest of the run
         live = profiles[: len(self.replicas)]
         dev = [pr.device_tiering for pr in live if pr.device_tiering]
+        shard_caps = {
+            pr.rid: tuple(pr.device_tiering["shard_near_capacity"])
+            for pr in live
+            if pr.device_tiering and "shard_near_capacity" in pr.device_tiering
+        }
         epoch = TierEpoch(
             int(now),
             p.hot_blocks,
@@ -151,6 +167,7 @@ class AutoTierer:
             device_dispatches=sum(d["dispatches"] for d in dev),
             device_host_syncs=sum(d["host_syncs"] for d in dev),
             prefetch_table=table,
+            shard_near_capacity=shard_caps,
         )
         self.history.append(epoch)
         return epoch
@@ -160,9 +177,10 @@ class AutoTierer:
         """Latest pushed near set — what a scaled-up replica warms from."""
         return self.history[-1].near_ids if self.history else None
 
-    def warm_successors(self) -> Dict[int, tuple]:
-        """Latest fleet prefetch table — a joining host predicts from its
-        first step instead of cold-starting its own trace training."""
+    def warm_successors(self) -> Dict[str, Dict[int, tuple]]:
+        """Latest fleet prefetch tables (tenant-partitioned) — a joining
+        host predicts from its first step instead of cold-starting its own
+        trace training."""
         return self.history[-1].prefetch_table if self.history else {}
 
     @property

@@ -65,6 +65,11 @@ class ReplicaProfile:
     # profile and retrains fleet-wide instead of merging these — but a
     # retired host's table (via extra_profiles) is still inspectable.
     successors: Dict[int, tuple] = dataclasses.field(default_factory=dict)
+    # stream id (engine seq id) -> tenant name for every request this host
+    # admitted: trace-window streams are seq ids, and this map is what lets
+    # the fleet aggregator partition successor training per tenant (one
+    # tenant's template chains never enter another tenant's table)
+    stream_tenants: Dict[int, str] = dataclasses.field(default_factory=dict)
 
     @property
     def n_pages(self) -> int:
@@ -189,6 +194,7 @@ class Replica:
             device_tiering=None if eng.tiered is None else eng.tiered.stats(),
             metrics=eng.metrics.snapshot(),
             successors=train_successors(eng.tracer.windows[-64:]),
+            stream_tenants=dict(eng._seq_tenant),
         )
 
     def load_successors(self, table: dict):

@@ -517,9 +517,14 @@ class FleetRouter:
             # error at the default growth) — NOT np.percentile over the raw
             # sample list, which cannot merge across routers/windows.
             # wait_samples keeps the raw list for exact-replay comparisons.
+            # A tenant with NO samples gets no percentile keys at all:
+            # Histogram.quantile returns None on an empty series, and
+            # zero-filling here used to make "never waited" and "no data"
+            # indistinguishable in the report.
             h = self.metrics.histogram("queue_wait", tenant=t)
-            o["wait_p50"] = h.quantile(0.50)
-            o["wait_p99"] = h.quantile(0.99)
+            if h.count:
+                o["wait_p50"] = h.quantile(0.50)
+                o["wait_p99"] = h.quantile(0.99)
             # time-to-first-token (submit -> first generated token, virtual
             # time): recorded by each ENGINE — at admit under whole-slot
             # prefill, at the prompt-completing chunk step under chunked
@@ -534,8 +539,9 @@ class FleetRouter:
                 )
                 if eh is not None:
                     th.merge(eh)
-            o["ttft_p50"] = th.quantile(0.50)
-            o["ttft_p99"] = th.quantile(0.99)
+            if th.count:
+                o["ttft_p50"] = th.quantile(0.50)
+                o["ttft_p99"] = th.quantile(0.99)
         return out
 
     # ------------------------------------------------------------------

@@ -18,6 +18,7 @@ import threading
 from typing import Optional, Sequence, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisName = Union[str, tuple, None]
@@ -46,9 +47,58 @@ def make_production_mesh(*, multi_pod: bool = False, pool: int = 0) -> Mesh:
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
-    """Mesh over whatever devices exist (tests / CPU smoke)."""
+    """Mesh over whatever devices exist (tests / CPU smoke).
+
+    ``model`` must divide the host device count exactly: the old behavior
+    (``n // model``) silently dropped the remainder devices from the mesh,
+    which is never what a caller sizing a model axis wants.
+    """
     n = len(jax.devices())
+    if model < 1 or n % model != 0:
+        dropped = n % model if model >= 1 else n
+        raise ValueError(
+            f"model={model} does not divide the {n} available devices; "
+            f"an (n // model, model) mesh would silently drop {dropped} "
+            "device(s). Pick a model-axis size that divides the device count."
+        )
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serving_mesh(model: int = 1) -> Mesh:
+    """1-D ``("model",)`` mesh over the first ``model`` local devices.
+
+    The sharded serving engine's mesh: unlike :func:`make_host_mesh` it
+    does NOT require the model axis to divide the host device count — a
+    2-shard replica on an 8-device host simply uses 2 devices (the other
+    6 belong to other replicas). CPU-testable under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devs = jax.devices()
+    if model < 1 or model > len(devs):
+        raise ValueError(
+            f"model={model} shards need {model} devices; host has {len(devs)}"
+        )
+    return Mesh(np.asarray(devs[:model]), ("model",))
+
+
+def shard_model_params(params, mesh: Mesh, axis: str = MODEL):
+    """Place a parameter pytree on ``mesh`` with each leaf's LAST axis
+    sharded over ``axis`` when divisible, replicated otherwise — the
+    ``with_sharding_constraint``-style tensor-parallel layout, applied at
+    placement time so every later jitted step computes on sharded operands
+    without per-call constraint calls. On a 1-device mesh this is a pure
+    device_put: values (and therefore decoded tokens) are bit-identical to
+    the unsharded engine."""
+    size = int(mesh.shape[axis])
+
+    def put(x):
+        if getattr(x, "ndim", 0) >= 1 and size > 1 and x.shape[-1] % size == 0:
+            s = NamedSharding(mesh, P(*([None] * (x.ndim - 1) + [axis])))
+        else:
+            s = NamedSharding(mesh, P())
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, params)
 
 
 # ---------------------------------------------------------------------------

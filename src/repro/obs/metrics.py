@@ -108,9 +108,14 @@ class Histogram:
         for i, n in other.buckets.items():
             self.buckets[i] = self.buckets.get(i, 0) + n
 
-    def quantile(self, q: float) -> float:
+    def quantile(self, q: float) -> Optional[float]:
+        """Rank-``ceil(q*count)`` bucket upper bound, or ``None`` when the
+        histogram is empty. An empty series has NO quantile — reporting 0.0
+        made a tenant with no samples indistinguishable from one with
+        genuinely zero latency, so consumers must omit (not zero-fill) the
+        statistic when this returns None."""
         if self.count == 0:
-            return 0.0
+            return None
         rank = min(self.count, max(1, math.ceil(q * self.count)))
         if rank <= self.zero:
             return 0.0
@@ -126,8 +131,10 @@ class Histogram:
         return self.sum / max(self.count, 1)
 
     def state(self) -> dict:
-        """JSON-serializable snapshot (the metrics-JSONL export format)."""
-        return {
+        """JSON-serializable snapshot (the metrics-JSONL export format).
+        ``p50``/``p99`` appear only when there are samples — an empty
+        histogram exports its (zero) count, not a fabricated latency."""
+        out = {
             "type": "histogram",
             "growth": self.growth,
             "zero": self.zero,
@@ -135,9 +142,11 @@ class Histogram:
             "sum": self.sum,
             "max": self.max,
             "buckets": {str(i): n for i, n in sorted(self.buckets.items())},
-            "p50": self.quantile(0.50),
-            "p99": self.quantile(0.99),
         }
+        if self.count:
+            out["p50"] = self.quantile(0.50)
+            out["p99"] = self.quantile(0.99)
+        return out
 
 
 @dataclasses.dataclass

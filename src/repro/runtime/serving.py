@@ -78,7 +78,7 @@ from repro.configs.workloads import WorkloadProfile
 from repro.core.memtrace import MemTracer
 from repro.core.pagetable import FAR, NEAR, SharedKVPageTable
 from repro.core.placement import TieredPlacement
-from repro.core.prefetch import PrefetchEngine, train_successors
+from repro.core.prefetch import PrefetchEngine, train_tenant_successors
 from repro.core.profiler import AccessProfiler
 from repro.data.requests import ChunkState, Request, RequestGenerator
 from repro.env import env_flag
@@ -193,6 +193,11 @@ class EngineConfig:
     prefetch_lookahead: int = 4
     # cap on promoted pages per issue window (bounds wasted bandwidth)
     prefetch_max_promote: int = 32
+    # tensor-sharding degree of one logical replica: parameters and KV
+    # pages partition over the `model` axis of a serving mesh, each shard
+    # owning a per-shard TieredKVCache slice (runtime/sharded.py). 1 =
+    # today's unsharded engine; ShardedServingEngine consumes this.
+    model_shards: int = 1
     # continuous batching: prefill-chunk token budget per engine step.
     # 0 = infinite budget (the legacy whole-slot path: the whole prompt
     # prefills at admit through api.prefill). Positive values split every
@@ -290,6 +295,11 @@ class ServingEngine:
         # tenant name -> dense index into the device counter plane; stable
         # for the engine's lifetime so drained rows always map back
         self._tenant_index: Dict[str, int] = {}
+        # seq id (rid) -> tenant name for every request this engine ever
+        # admitted: trace-window streams ARE seq ids, so this map is what
+        # lets successor training partition transitions per tenant (and is
+        # exported in ReplicaProfile.stream_tenants for the fleet pool)
+        self._seq_tenant: Dict[int, str] = {}
         # device-resident decode feedback: the fused decode writes the next
         # tokens here and reads them back next step without a host round-trip
         self.next_tokens = jnp.zeros((e.max_batch,), jnp.int32)
@@ -415,17 +425,24 @@ class ServingEngine:
         self.tiered_max_err = 0.0  # max tiered-vs-flat read divergence seen
         self._page_wver = None  # per-page write version (fallback payloads)
         if e.device_tiering:
-            self.tiered = TieredKVCache(
-                e.n_pages,
-                self._payload_dim(),
-                self.placement.near_capacity,
-                identity_scales=e.tiered_identity_scales,
-                counter_slots=e.max_batch,
-            )
+            self.tiered = self._make_tiered_store()
             self._page_wver = np.zeros(e.n_pages, np.int64)
             # initial fill: position the starting near set without charging
             # it to the migration books (nothing has been written yet)
             self.tiered.migrate(self.placement.near_blocks(), account=False)
+
+    def _make_tiered_store(self):
+        """Build the device-resident tiered store. Overridable seam: the
+        sharded engine returns a per-shard facade here; everything else in
+        the engine talks to the store through the same interface."""
+        e = self.ecfg
+        return TieredKVCache(
+            e.n_pages,
+            self._payload_dim(),
+            self.placement.near_capacity,
+            identity_scales=e.tiered_identity_scales,
+            counter_slots=e.max_batch,
+        )
 
     # ------------------------------------------------------------------
     # legacy counter facade over the metrics registry (same ints, one store)
@@ -540,6 +557,10 @@ class ServingEngine:
         slot.chunk = None
         slot.chunks_done = 0
         self._tenant(req.tenant)  # register the tenant counter index
+        self._seq_tenant[req.rid] = req.tenant
+        # the prefetch buffer is partitioned per tenant: this stream's
+        # pending prefetches charge (and evict within) its tenant's share
+        self.prefetch.set_stream_partition(req.rid, req.tenant)
         return tokens, share
 
     def _admit(self):
@@ -1008,8 +1029,14 @@ class ServingEngine:
             # (drain_counters early-returns while the plane is clean)
             if self.ecfg.prefetch_promote:
                 if self.prefetch.predictor == "trace":
+                    # local training is tenant-partitioned like the fleet
+                    # push: trace streams are seq ids, and _seq_tenant maps
+                    # them back to the tenant whose table they train
                     self.prefetch.load_successors(
-                        train_successors(self.tracer.windows[-32:]), merge=True
+                        train_tenant_successors(
+                            self.tracer.windows[-32:], self._seq_tenant
+                        ),
+                        merge=True,
                     )
                 self._prefetch_window()
         return decoded
@@ -1043,9 +1070,11 @@ class ServingEngine:
         preds: List[int] = []
         seen = set()
         upcoming: Dict[int, int] = {}  # page -> queued readers about to walk it
+        part_of: Dict[int, str] = {}  # page -> tenant partition that predicted it
         for slot in self.slots:
             if not slot.active:
                 continue
+            tenant = slot.request.tenant
             pages = self.pagetable.seqs.get(slot.seq_id, [])
             if not pages:
                 continue
@@ -1060,6 +1089,7 @@ class ServingEngine:
                     if p not in seen:
                         seen.add(p)
                         preds.append(p)
+                        part_of[p] = tenant
             # the decode walk re-reads the WHOLE chain next step: chase one
             # predicted hop from every mapped page (promotes the far links
             # of a newly hot template chain the moment its head is seen),
@@ -1070,12 +1100,14 @@ class ServingEngine:
                     if 0 <= p < e.n_pages and p not in seen:
                         seen.add(p)
                         preds.append(p)
+                        part_of[p] = tenant
             for p in self.prefetch.predict_chain(
                 int(pages[-1]), stream=slot.seq_id, lookahead=e.prefetch_lookahead
             ):
                 if 0 <= p < e.n_pages and p not in seen:
                     seen.add(p)
                     preds.append(p)
+                    part_of[p] = tenant
         ps = e.page_size
         for req in list(self.queue)[: e.max_batch]:
             if len(req.tokens) < ps:
@@ -1094,6 +1126,9 @@ class ServingEngine:
                 int(pid),
                 stream=-1,
                 lookahead=max(e.prefetch_lookahead, e.max_len // e.page_size),
+                # a queued request has no live stream yet, but its tenant is
+                # known: chase THAT tenant's table, never a neighbor's
+                partition=req.tenant,
             )
             for p in chain:
                 if not 0 <= p < e.n_pages:
@@ -1102,6 +1137,7 @@ class ServingEngine:
                 if p not in seen:
                     seen.add(p)
                     preds.append(p)
+                    part_of[p] = req.tenant
         if not preds:
             return 0
 
@@ -1138,8 +1174,11 @@ class ServingEngine:
         # demoted pages leave the buffer first (unused ones are waste) ...
         self.prefetch.evict(evict_a)
         self.apply_placement(np.concatenate([keep, promote_a]))
-        # ... and promotions enter the books as prefetched-not-yet-used
-        self.prefetch.mark_prefetched(promote_a)
+        # ... and promotions enter the books as prefetched-not-yet-used,
+        # each charged to the tenant partition whose prediction named it
+        self.prefetch.mark_prefetched(
+            promote_a, partitions=[part_of.get(p, "") for p in promote]
+        )
         self._m_pf_promoted.inc(len(promote))
         return len(promote)
 

@@ -165,6 +165,42 @@ def test_store_segments_match_per_call_totals():
     assert per_call.dispatches == 2 * len(seg_sets)  # incl. the re-reads above
 
 
+def test_padding_segment_never_pollutes_role_or_slot_books():
+    """The segmented lookup pads the ragged id concat to the next power of
+    two by assigning sacrificial entries to segment ``n_segments - 1``; the
+    accumulator must keep that LAST segment out of every book. Differential
+    at a non-power-of-two id count (37 -> pads to 64: 27 sacrificial
+    entries) and segment count: per-slot rows, per-role totals and the
+    near/far sums all pin against a host oracle computed straight from the
+    tier map — any padding leak would inflate them."""
+    rng = np.random.default_rng(6)
+    store = TieredKVCache(n_pages=32, row_dim=16, near_capacity=8, counter_slots=8)
+    store.write(np.arange(32), rng.standard_normal((32, 16)).astype(np.float32))
+    store.migrate(np.arange(8))
+    seg_sizes = [9, 11, 7, 6, 4]  # 37 ids across 5 live segments
+    roles = [0, 1, 0, 1, 1]
+    ids = rng.integers(0, 32, size=sum(seg_sizes))
+    seg_of = np.repeat(np.arange(len(seg_sizes)), seg_sizes).astype(np.int32)
+    store.lookup_segments(
+        ids, seg_of, len(seg_sizes) + 1,
+        slot_idx=list(range(len(seg_sizes))),
+        tenant_idx=[0] * len(seg_sizes),
+        role_idx=roles,
+    )
+    d = store.drain_counters()
+    tier = store.tier_host
+    role_oracle = np.zeros((2, 2), np.int64)
+    for s, size in enumerate(seg_sizes):
+        seg_ids = ids[seg_of == s]
+        n = int((tier[seg_ids] == 0).sum())
+        role_oracle[roles[s]] += (n, size - n)
+        assert tuple(d["slot"][s]) == (n, size - n), s
+    np.testing.assert_array_equal(d["role"], role_oracle)
+    # every real id counted exactly once, every padding entry nowhere
+    assert d["near"] + d["far"] == ids.size
+    assert (store.near_hits, store.far_hits) == (d["near"], d["far"])
+
+
 def test_prefetch_promote_window_keeps_budget():
     """The trace-driven prefetch issue window (prefetch_promote) batches its
     promotions into the boundary drain: identical traffic with the window on

@@ -403,7 +403,8 @@ def test_fleet_pooling_beats_per_host_tables():
     w0, w1 = _window([11, 12], streams=[0, 0]), _window([11, 12], streams=[0, 0])
     assert train_successors([w0]) == {}  # one sighting: below the gate
     table = aggregator.train_fleet_successors([_profile(0, [w0]), _profile(1, [w1])])
-    assert table[11] == (12,)
+    # fleet tables are tenant-partitioned; untagged streams train ""
+    assert table[""][11] == (12,)
 
 
 def test_fleet_pooling_namespaces_streams_per_host():
@@ -412,7 +413,7 @@ def test_fleet_pooling_namespaces_streams_per_host():
     (that is the point), but no spurious same-stream edges appear."""
     p0 = _profile(0, [_window([1, 2, 1, 2], streams=[0, 0, 0, 0])])
     p1 = _profile(1, [_window([7, 8, 7, 8], streams=[0, 0, 0, 0])])
-    table = aggregator.train_fleet_successors([p0, p1])
+    table = aggregator.train_fleet_successors([p0, p1])[""]
     assert table[1] == (2,) and table[7] == (8,)
     assert 7 not in table.get(2, ())
 
@@ -422,6 +423,86 @@ def test_tier_epoch_ships_prefetch_table():
 
     ep = TierEpoch(
         fleet_step=0, near_ids=np.zeros(0, np.int64), near_hit_frac=0.0,
-        migrated_pages=0, overlap_prev=1.0, prefetch_table={3: (4,)},
+        migrated_pages=0, overlap_prev=1.0,
+        prefetch_table={"web": {3: (4,)}},
     )
-    assert ep.prefetch_table[3] == (4,)
+    assert ep.prefetch_table["web"][3] == (4,)
+
+
+# ---------------------------------------------------------------------------
+# tenant-partitioned prefetch: table isolation + fair-share buffer
+
+
+def test_train_tenant_successors_partitions_by_stream_tenant():
+    from repro.core.prefetch import train_tenant_successors
+
+    # tenant A (stream 0) walks 1->2, tenant B (stream 1) walks 7->8; both
+    # twice so each crosses the min_count gate within its own partition
+    w = _window([1, 7, 2, 8, 1, 7, 2, 8], streams=[0, 1, 0, 1, 0, 1, 0, 1])
+    tables = train_tenant_successors([w], {0: "A", 1: "B"})
+    assert tables["A"] == {1: (2,)}
+    assert tables["B"] == {7: (8,)}
+    # unmapped streams train the default "" partition, and empty
+    # partitions are dropped rather than shipped
+    tables = train_tenant_successors([w], {0: "A"})
+    assert tables["A"] == {1: (2,)}
+    assert tables[""] == {7: (8,)}
+    assert set(tables) == {"A", ""}
+
+
+def test_trace_predictions_come_from_own_tenant_table_only():
+    eng = PrefetchEngine(predictor="trace", buffer_blocks=64, degree=2)
+    eng.load_successors({"A": {1: (2,)}, "B": {1: (9,)}})
+    eng.set_stream_partition(10, "A")
+    eng.set_stream_partition(11, "B")
+    assert eng.predict_chain(1, stream=10, lookahead=1) == [2]
+    assert eng.predict_chain(1, stream=11, lookahead=1) == [9]
+    # a stream with no partition reads the default table — empty here
+    assert eng.predict_chain(1, stream=12, lookahead=1) == []
+    # explicit partition override (queued requests with no stream yet)
+    assert eng.predict_chain(1, stream=-1, lookahead=1, partition="B") == [9]
+
+
+def test_fair_share_eviction_protects_under_share_tenant():
+    """The interference fix: tenant B holds 2 pending prefetches (under its
+    fair share of a 8-entry buffer); tenant A floods 20 more. Every
+    overflow eviction must land on A's own entries — B's survive until B's
+    demand accesses consume them."""
+    eng = PrefetchEngine(predictor="trace", buffer_blocks=8)
+    eng.mark_prefetched([100, 101], partitions="B")
+    eng.mark_prefetched(list(range(20)), partitions="A")
+    assert len(eng.buffer) == 8
+    assert 100 in eng.buffer and 101 in eng.buffer
+    assert eng._part_sizes == {"A": 6, "B": 2}
+    # B's entries still cover B's demand accesses
+    eng.set_stream_partition(1, "B")
+    assert eng.access(100, is_far=True, stream=1)
+    assert eng.access(101, is_far=True, stream=1)
+    assert eng.stats.used_prefetches == 2
+
+
+def test_over_share_inserter_pays_for_its_own_overflow():
+    """When the inserting tenant is over its fair share, IT pays — oldest
+    entry first — rather than pushing the cost onto its neighbor."""
+    eng = PrefetchEngine(predictor="trace", buffer_blocks=4)
+    eng.mark_prefetched([50], partitions="B")
+    eng.mark_prefetched([0, 1, 2], partitions="A")  # full: A=3 > 4/2, B=1
+    eng.mark_prefetched([3], partitions="A")
+    assert 50 in eng.buffer  # B untouched
+    assert 0 not in eng.buffer  # A's oldest evicted
+    assert set(eng.buffer) == {50, 1, 2, 3}
+    assert eng.stats.unused_evicted == 1
+
+
+def test_partition_sizes_track_consume_evict_finalize():
+    eng = PrefetchEngine(predictor="trace", buffer_blocks=8)
+    eng.mark_prefetched([1, 2], partitions="A")
+    eng.mark_prefetched([3], partitions="B")
+    eng.set_stream_partition(0, "A")
+    eng.access(1, is_far=True, stream=0)  # consume
+    assert eng._part_sizes == {"A": 1, "B": 1}
+    eng.evict([3])  # demotion eviction
+    assert eng._part_sizes == {"A": 1}
+    eng.finalize()
+    assert eng._part_sizes == {}
+    assert eng.stats.unused_evicted == 2  # evicted 3 + resident 2

@@ -1,0 +1,363 @@
+"""Shard-correct serving: one logical replica spanning chips.
+
+Two layers of oracle, matching how the sharded path is built:
+
+1. store equivalence — ``ShardedTieredKV`` (page-interleaved per-shard
+   ``TieredKVCache`` slices) against ONE unsharded store driven by the
+   identical global stream: returned rows, drained counter planes (slot /
+   tenant / role), migration books and the dispatch/sync budget must all
+   merge by pure summation into the unsharded values. These run on 1 CPU
+   device — the facade's shards are host-side slices, no mesh needed.
+2. engine equivalence — a 1-shard ``ShardedServingEngine`` is bit-exact
+   with ``ServingEngine`` (tokens, counters, tenant books), and an N-shard
+   engine's MERGED counters equal the 1-shard totals on the same seeded
+   request stream at the unchanged budget of one segmented dispatch per
+   shard per step and zero mandatory host syncs. N-shard engine tests need
+   a multi-device mesh: run under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (CI's sharded
+   job); they skip on a single-device host.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.runtime.tiered_kv as tiered_kv_mod
+from repro.configs import get_config
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator
+from repro.models.api import get_model
+from repro.runtime.serving import EngineConfig, ServingEngine
+from repro.runtime.sharded import ShardedServingEngine, ShardedTieredKV
+from repro.runtime.tiered_kv import TieredKVCache
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count>=2",
+)
+
+
+# ---------------------------------------------------------------------------
+# 1. store equivalence (1-device safe)
+
+
+def _paired_stores(n_pages, n_shards, row_dim=16, capacity=10, slots=6):
+    base = TieredKVCache(n_pages, row_dim, capacity, identity_scales=True,
+                         counter_slots=slots)
+    shrd = ShardedTieredKV(n_pages, row_dim, capacity, n_shards,
+                           identity_scales=True, counter_slots=slots)
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(
+        rng.integers(-127, 128, size=(n_pages, row_dim)), jnp.float32
+    )
+    for s in (base, shrd):
+        s.write(np.arange(n_pages), rows)
+    return base, shrd, rows, rng
+
+
+def _drive(store, rng_seed, n_rounds=5, n_pages=64, capacity=10, slots=6):
+    """One deterministic mixed stream: migrations + ragged segmented
+    lookups with slot/tenant/role routing. Returns the concatenated rows."""
+    rng = np.random.default_rng(rng_seed)
+    got = []
+    for _ in range(n_rounds):
+        near = rng.choice(n_pages, size=rng.integers(0, capacity + 1), replace=False)
+        store.migrate(near)
+        seg_sizes = rng.integers(1, 9, size=rng.integers(1, slots + 1))
+        ids = rng.integers(0, n_pages, size=seg_sizes.sum())
+        seg_of = np.repeat(np.arange(seg_sizes.size), seg_sizes).astype(np.int32)
+        got.append(
+            np.asarray(
+                store.lookup_segments(
+                    ids, seg_of, slots + 1,
+                    slot_idx=list(range(seg_sizes.size)),
+                    tenant_idx=list(rng.integers(0, 3, size=seg_sizes.size)),
+                    role_idx=list(rng.integers(0, 2, size=seg_sizes.size)),
+                )
+            )
+        )
+    return np.concatenate(got)
+
+
+def test_sharded_store_rejects_non_divisor():
+    with pytest.raises(ValueError, match="divide"):
+        ShardedTieredKV(10, 8, 4, 3)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_store_counters_match_unsharded(n_shards):
+    """The core merge algebra: same global stream, summed per-shard books
+    == unsharded books — rows, totals, and every drained plane."""
+    n_pages, cap, slots = 64, 10, 6
+    base, shrd, _, _ = _paired_stores(n_pages, n_shards, capacity=cap, slots=slots)
+    r_base = _drive(base, 7, n_pages=n_pages, capacity=cap, slots=slots)
+    r_shrd = _drive(shrd, 7, n_pages=n_pages, capacity=cap, slots=slots)
+    np.testing.assert_array_equal(r_base, r_shrd)
+    for attr in ("near_hits", "far_hits", "writes", "moved_rows",
+                 "moved_bytes", "near_count"):
+        assert getattr(base, attr) == getattr(shrd, attr), attr
+    db, ds = base.drain_counters(), shrd.drain_counters()
+    assert (db["near"], db["far"]) == (ds["near"], ds["far"])
+    np.testing.assert_array_equal(db["role"], ds["role"])
+    np.testing.assert_array_equal(db["slot"], ds["slot"][: db["slot"].shape[0]])
+    np.testing.assert_array_equal(db["tenant"], ds["tenant"][: db["tenant"].shape[0]])
+    # per-shard deltas partition the totals exactly
+    stats = shrd.stats()
+    assert sum(stats["shard_near_hits"]) == stats["near_hits"]
+    assert sum(stats["shard_far_hits"]) == stats["far_hits"]
+    assert stats["shards"] == n_shards
+
+
+def test_sharded_store_drain_cadence_invariance():
+    """Draining each shard's plane after every lookup vs once at the end
+    charges identical merged totals AND identical per-shard deltas — the
+    PR-5 pure-sum invariant holds per shard."""
+    n_pages, cap, slots = 64, 10, 6
+    eager_tot = {"near": 0, "far": 0}
+    eager_shards = None
+    _, eager, _, _ = _paired_stores(n_pages, 2, capacity=cap, slots=slots)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        ids = rng.integers(0, n_pages, size=12)
+        eager.lookup_segments(ids, np.zeros(12, np.int32), 2,
+                              slot_idx=[0], tenant_idx=[0], role_idx=[0])
+        d = eager.drain_counters()
+        eager_tot["near"] += d["near"]
+        eager_tot["far"] += d["far"]
+    eager_shards = [dict(d) for d in eager.take_shard_drains()]
+
+    _, lazy, _, _ = _paired_stores(n_pages, 2, capacity=cap, slots=slots)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        ids = rng.integers(0, n_pages, size=12)
+        lazy.lookup_segments(ids, np.zeros(12, np.int32), 2,
+                             slot_idx=[0], tenant_idx=[0], role_idx=[0])
+    d = lazy.drain_counters()
+    assert (d["near"], d["far"]) == (eager_tot["near"], eager_tot["far"])
+    assert lazy.take_shard_drains() == eager_shards
+    # and the take itself resets the pending deltas
+    assert all(t == {"near": 0, "far": 0} for t in lazy.take_shard_drains())
+
+
+def test_sharded_store_idle_shard_pays_zero():
+    """A step whose page walk never touches a shard costs that shard
+    nothing: no dispatch, and its clean plane drains without a host sync."""
+    shrd = ShardedTieredKV(16, 8, 6, 2, identity_scales=True, counter_slots=2)
+    shrd.write(np.arange(16), jnp.zeros((16, 8), jnp.float32))
+    even = np.arange(0, 16, 2)  # all owned by shard 0
+    shrd.lookup_segments(even, np.zeros(even.size, np.int32), 2,
+                         slot_idx=[0], tenant_idx=[0], role_idx=[0])
+    s = shrd.stats()
+    assert s["shard_dispatches"] == [1, 0]
+    shrd.drain_counters()
+    assert shrd.shards[0].host_syncs == 1
+    assert shrd.shards[1].host_syncs == 0
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_store_restricted_plan_never_cut(n_shards):
+    """Any sanitized global near set restricted to a shard fits that
+    shard's capacity (min(pages_owned, global_cap)), so the per-shard tier
+    maps are exact restrictions of the unsharded map — sanitize's silent
+    capacity cut can never fire shard-side."""
+    n_pages, cap = 64, 10
+    base, shrd, _, _ = _paired_stores(n_pages, n_shards, capacity=cap)
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        near = rng.choice(n_pages, size=rng.integers(0, cap + 1), replace=False)
+        mb, ms = base.migrate(near), shrd.migrate(near)
+        assert mb == ms
+        tier = np.concatenate(
+            [np.flatnonzero(sh.tier_host == 0) * n_shards + s
+             for s, sh in enumerate(shrd.shards)]
+        )
+        np.testing.assert_array_equal(
+            np.sort(tier), np.flatnonzero(base.tier_host == 0)
+        )
+        assert shrd.near_count == base.near_count == near.size
+
+
+# ---------------------------------------------------------------------------
+# 2. engine equivalence
+
+
+def _mk_base(**ekw):
+    cfg = get_config("smollm-360m").reduced()
+    api = get_model(cfg)
+    if not hasattr(_mk_base, "_params"):
+        _mk_base._params = api.init(jax.random.PRNGKey(0))
+    kw = dict(
+        max_batch=4, max_len=64, n_pages=256, near_frac=0.02, placement_window=4,
+        device_tiering=True, tiered_identity_scales=True,
+    )
+    kw.update(ekw)
+    return cfg, api, _mk_base._params, EngineConfig(**kw)
+
+
+def _run_collect(eng, cfg, n_requests=6, seed=0):
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=24, decode_mean=8, prefix_share=0.5,
+        n_prefixes=2,
+    )
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=seed)
+    for _ in range(n_requests):
+        eng.submit(next(gen))
+    tokens, steps = [], 0
+    while (eng.queue or any(s.active for s in eng.slots)) and steps < 400:
+        eng.step()
+        tokens.append(np.asarray(eng.next_tokens))
+        steps += 1
+    return np.array(tokens)
+
+
+def test_sharded_engine_validates_config():
+    cfg, api, params, _ = _mk_base()
+    with pytest.raises(ValueError, match="divide"):
+        ShardedServingEngine(
+            api, params, EngineConfig(max_batch=4, max_len=64, n_pages=256,
+                                      device_tiering=True, model_shards=3)
+        )
+    with pytest.raises(ValueError):
+        ShardedServingEngine(
+            api, params,
+            EngineConfig(max_batch=4, max_len=64, n_pages=256,
+                         device_tiering=True,
+                         model_shards=2 * len(jax.devices())),
+        )
+
+
+@pytest.mark.slow
+def test_one_shard_engine_bit_exact():
+    """The correctness anchor: a 1-shard mesh IS today's engine — same
+    tokens, same drained counters, same tenant books, bit for bit."""
+    cfg, api, params, ecfg = _mk_base(tiered_verify=True)
+    base = ServingEngine(api, params, ecfg, seed=0)
+    t_base = _run_collect(base, cfg)
+    cfg, api, params, ecfg1 = _mk_base(tiered_verify=True, model_shards=1)
+    shrd = ShardedServingEngine(api, params, ecfg1, seed=0)
+    t_shrd = _run_collect(shrd, cfg)
+    np.testing.assert_array_equal(t_base, t_shrd)
+    assert base.live_counters() == shrd.live_counters()
+    sb, ss = base.stats(), shrd.stats()
+    for key in ("tokens_decoded", "requests_finished", "near_hit_rate",
+                "migrations", "prefill_tokens", "prefetch_accuracy", "tenants"):
+        assert sb[key] == ss[key], key
+    db, dsh = sb["device_tiering"], ss["device_tiering"]
+    for key in ("near_hits", "far_hits", "writes", "moved_rows", "moved_bytes",
+                "dispatches", "decode_near_hits", "decode_far_hits",
+                "prefill_near_hits", "prefill_far_hits", "max_read_error"):
+        assert db[key] == dsh[key], key
+    np.testing.assert_array_equal(base.role_hits, shrd.role_hits)
+    assert dsh["shards"] == 1
+
+
+@multi_device
+@pytest.mark.slow
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_n_shard_counter_merge_equals_one_shard(n_shards):
+    """N-shard merged counters == 1-shard totals on the same request
+    stream. Token VALUES may drift across shard counts (cross-device float
+    reassociation in the model math); the page walks, and therefore every
+    counter plane, cannot."""
+    cfg, api, params, e1 = _mk_base(model_shards=1)
+    one = ShardedServingEngine(api, params, e1, seed=0)
+    _run_collect(one, cfg)
+    cfg, api, params, en = _mk_base(model_shards=n_shards)
+    many = ShardedServingEngine(api, params, en, seed=0)
+    _run_collect(many, cfg)
+    s1, sn = one.stats(), many.stats()
+    assert s1["tenants"] == sn["tenants"]
+    assert s1["tokens_decoded"] == sn["tokens_decoded"]
+    assert s1["requests_finished"] == sn["requests_finished"]
+    d1, dn = s1["device_tiering"], sn["device_tiering"]
+    for key in ("near_hits", "far_hits", "writes", "moved_rows",
+                "decode_near_hits", "decode_far_hits",
+                "prefill_near_hits", "prefill_far_hits"):
+        assert d1[key] == dn[key], key
+    np.testing.assert_array_equal(one.role_hits, many.role_hits)
+    # the merge really is a sum over shard-disjoint planes
+    assert sum(dn["shard_near_hits"]) == dn["near_hits"]
+    assert sum(dn["shard_far_hits"]) == dn["far_hits"]
+    assert dn["shards"] == n_shards
+    # shard-labeled flight-recorder rows carry the same partition: summing
+    # them reproduces the replica totals (they merge as pure sums upstream)
+    assert many.metrics.total("shard_near_hits") == dn["near_hits"]
+    assert many.metrics.total("shard_far_hits") == dn["far_hits"]
+
+
+@multi_device
+@pytest.mark.slow
+def test_sharded_dispatch_and_sync_budget(monkeypatch):
+    """Budget at N shards: at most one segmented dispatch per shard per
+    step (idle shards pay zero), and host syncs happen ONLY at drain
+    boundaries — never per step."""
+    calls = []
+    orig_seg = tiered_kv_mod.tiered_lookup_segments
+
+    def seg(*a, **k):
+        calls.append("seg")
+        return orig_seg(*a, **k)
+
+    monkeypatch.setattr(tiered_kv_mod, "tiered_lookup_segments", seg)
+    n_shards = 2
+    cfg, api, params, ecfg = _mk_base(model_shards=n_shards)
+    eng = ShardedServingEngine(api, params, ecfg, seed=0)
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=24, decode_mean=8, prefix_share=0.5,
+        n_prefixes=2,
+    )
+    gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=0)
+    for _ in range(6):
+        eng.submit(next(gen))
+    while (eng.queue or any(s.active for s in eng.slots)) and eng.engine_steps < 200:
+        before = len(calls)
+        eng.step()
+        assert 1 <= len(calls) - before <= n_shards, (len(calls) - before)
+    st = eng.stats()["device_tiering"]
+    assert eng.tiered.dispatches == len(calls)
+    assert all(d <= eng.engine_steps for d in st["shard_dispatches"])
+    # zero mandatory per-step syncs: every sync is a (windowed) drain
+    assert eng.tiered.host_syncs == eng.tiered.drains
+    assert st["host_syncs_per_step"] < 1.0
+
+
+@multi_device
+@pytest.mark.slow
+def test_sharded_per_shard_drain_cadence_invariance():
+    """Per-step drains vs windowed drains on an N-shard engine: merged
+    books AND the shard-labeled counter rows are identical — each shard's
+    plane is a pure sum, so cadence is invisible per shard too."""
+    engines = []
+    for _ in range(2):
+        cfg, api, params, ecfg = _mk_base(model_shards=2)
+        e = ShardedServingEngine(api, params, ecfg, seed=0)
+        prof = dataclasses.replace(
+            get_profile("Web1"), prompt_mean=24, decode_mean=8,
+            prefix_share=0.5, n_prefixes=2,
+        )
+        gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=5)
+        for _ in range(6):
+            e.submit(next(gen))
+        engines.append(e)
+    windowed, every_step = engines
+    while (windowed.queue or any(s.active for s in windowed.slots)) and windowed.engine_steps < 200:
+        windowed.step()
+        every_step.step()
+        every_step.drain_tier_counters()
+    sw, se = windowed.stats(), every_step.stats()
+    assert sw["tenants"] == se["tenants"]
+    dw, de = sw["device_tiering"], se["device_tiering"]
+    assert (dw["near_hits"], dw["far_hits"]) == (de["near_hits"], de["far_hits"])
+    assert de["drains"] > dw["drains"]
+
+    def shard_rows(eng):
+        return {
+            k: v
+            for k, v in eng.metrics.snapshot().counters.items()
+            if k[0] in ("shard_near_hits", "shard_far_hits")
+        }
+
+    assert shard_rows(windowed) == shard_rows(every_step)

@@ -30,6 +30,43 @@ def test_shard_divisibility_drop():
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_host_mesh_rejects_non_dividing_model_axis():
+    """An (n // model, model) mesh would silently drop n % model devices;
+    make_host_mesh must refuse instead of quietly shrinking the fleet."""
+    import pytest
+
+    bad = 2 * len(jax.devices())  # guaranteed non-divisor of the device count
+    with pytest.raises(ValueError, match="divide"):
+        meshlib.make_host_mesh(model=bad)
+    with pytest.raises(ValueError):
+        meshlib.make_host_mesh(model=0)
+
+
+def test_serving_mesh_shapes_and_bounds():
+    import pytest
+
+    mesh = meshlib.make_serving_mesh(model=1)
+    assert mesh.shape["model"] == 1
+    with pytest.raises(ValueError):
+        meshlib.make_serving_mesh(model=len(jax.devices()) + 1)
+    with pytest.raises(ValueError):
+        meshlib.make_serving_mesh(model=0)
+
+
+def test_shard_model_params_single_device_identity():
+    """On a 1-device serving mesh the placement is a pure device_put: every
+    leaf comes back bit-identical (the 1-shard bit-exactness anchor)."""
+    mesh = meshlib.make_serving_mesh(model=1)
+    tree = {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": jnp.arange(5, dtype=jnp.float32),
+        "odd": jnp.ones((3,), jnp.float32),
+    }
+    out = meshlib.shard_model_params(tree, mesh)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]), np.asarray(out[k]))
+
+
 def test_production_mesh_shapes():
     # shape math only (no devices needed for the assertion of the spec)
     import inspect
