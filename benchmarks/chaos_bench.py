@@ -1,0 +1,195 @@
+"""Chaos study: goodput + tail queue-wait + per-tenant shed isolation under
+a seeded kill/recover schedule vs the fault-free baseline.
+
+Two tenants (steady web + bursty cache, the tenant_interference pair) share
+a fleet that is then put through three deterministic scenarios:
+
+* **baseline**     — no chaos engine attached (the plain event path);
+* **zero-fault**   — a ChaosEngine with an EMPTY scenario: watchdogs armed,
+  timeouts posted and cancelled, but nothing fires. Must be bit-exact with
+  baseline — the equivalence the chaos machinery is built on;
+* **kill-recover** — one replica crashes mid-burst and a replacement host
+  joins after a fixed outage window (ElasticFleet scale-up, near tier
+  pre-warmed from the fleet plan), plus a transient hang on a survivor.
+
+Reported per scenario: goodput (decoded tokens per unit virtual time —
+lost/discarded decode work never counts), per-tenant p99 queue wait and
+shed rate (one tenant's burst landing in its own shed book, not its
+neighbor's, even while a host is down), failovers, retries and the
+quantified ``lost_tokens``.
+
+Self-checks (process-style return code, like fleet_bench):
+1. zero-fault chaos is bit-identical to baseline on the merged books;
+2. the kill-recover scenario is a pure function of its seed (two runs,
+   identical normalized stats + fault log);
+3. no silent drops: every admitted rid ends completed/shed/failed, and
+   ``lost_tokens`` equals the sum over crash lost_windows;
+4. the crash actually cost something (>= 1 failover) and the fleet still
+   finished every non-shed request.
+
+Emits ``BENCH_chaos.json`` next to this file.
+
+PYTHONPATH=src python -m benchmarks.run chaos_bench
+"""
+import dataclasses
+import json
+import pathlib
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator, interleave
+from repro.fleet import (
+    AdmissionController,
+    ChaosEngine,
+    FaultEvent,
+    SLOModel,
+    build_fleet,
+    fleet_vocab,
+)
+
+from _common import fmt_table
+
+N_REPLICAS = 3
+N_REQUESTS = 24
+SEED = 0
+
+TENANTS = {
+    "web": dict(
+        base="Web1",
+        overrides=dict(prompt_mean=24, decode_mean=8, prefix_share=0.9, n_prefixes=3),
+        rate=8.0,
+        slo=SLOModel(max_delay_steps=96.0),
+    ),
+    "cache": dict(
+        base="Cache1",
+        overrides=dict(prompt_mean=8, decode_mean=6, prefix_share=0.0, n_prefixes=4),
+        rate=32.0,
+        slo=SLOModel(max_delay_steps=12.0),
+    ),
+}
+
+# the kill/recover schedule: one hard crash with a replacement host after a
+# 6-unit outage, plus a 3-unit stall on a survivor that recovers before the
+# watchdog (transient — no failover charge)
+SCENARIO = [
+    FaultEvent(6.0, "crash", rid=1, duration=6.0),
+    FaultEvent(10.0, "hang", rid=0, duration=3.0),
+]
+
+
+def _build():
+    return build_fleet(
+        N_REPLICAS,
+        policy="least-loaded",
+        trace_window=16,
+        trace_period=32,
+        admission=AdmissionController(
+            SLOModel(max_delay_steps=64.0),
+            tenant_slos={t: TENANTS[t]["slo"] for t in TENANTS},
+        ),
+        autotier=dict(near_frac=0.30, epoch_steps=8),
+        elastic=dict(min_replicas=1, max_replicas=N_REPLICAS + 1),
+        seed=SEED,
+    )
+
+
+def _traffic(seed: int):
+    gens = []
+    for i, t in enumerate(sorted(TENANTS)):
+        spec = TENANTS[t]
+        prof = dataclasses.replace(get_profile(spec["base"]), **spec["overrides"])
+        gens.append(
+            RequestGenerator(
+                prof, vocab_size=fleet_vocab(), seed=seed + i, rate=spec["rate"], tenant=t
+            )
+        )
+    return iter(interleave(gens, N_REQUESTS))
+
+
+def _norm(stats: dict) -> str:
+    """Stable comparison surface: everything but the per-host breakdowns."""
+    keep = {k: v for k, v in stats.items() if k not in ("per_replica", "retired_replicas")}
+    return json.dumps(keep, sort_keys=True, default=str)
+
+
+def run_cell(scenario, seed: int = SEED):
+    fleet = _build()
+    if scenario is not None:
+        ChaosEngine(fleet, scenario, dispatch_timeout=8.0, max_retries=3)
+    stats = fleet.run(_traffic(seed), n_requests=N_REQUESTS, max_steps=600, submit_per_step=3)
+    return fleet, stats
+
+
+def _row(name: str, stats: dict):
+    tens = stats["tenants"]
+    return (
+        name,
+        f"{stats['simulated_throughput']:.3f}",
+        stats["requests_finished"],
+        stats["requests_failed"],
+        stats["failovers"],
+        stats["lost_tokens"],
+        " ".join(f"{t}={ts['wait_p99']:.1f}" for t, ts in sorted(tens.items())),
+        " ".join(f"{t}={ts['shed_rate']:.2f}" for t, ts in sorted(tens.items())),
+    )
+
+
+def main():
+    base_fleet, base = run_cell(None)
+    zero_fleet, zero = run_cell([])
+    kill_fleet, kill = run_cell(SCENARIO)
+
+    rows = [_row("baseline", base), _row("zero-fault chaos", zero), _row("kill-recover", kill)]
+    print("chaos study: seeded kill/recover vs fault-free baseline")
+    print(
+        fmt_table(
+            rows,
+            ("scenario", "goodput", "done", "failed", "failovers", "lost-tok", "wait-p99", "shed-rate"),
+        )
+    )
+
+    failures = []
+    # 1. zero-fault chaos config is bit-exact with the plain event path
+    if _norm(base) != _norm(zero):
+        failures.append("zero-fault chaos diverged from baseline books")
+    # 2. kill-recover is a pure function of the seed
+    refleet, rekill = run_cell(SCENARIO)
+    if _norm(kill) != _norm(rekill) or kill_fleet.chaos.log != refleet.chaos.log:
+        failures.append("kill-recover scenario not deterministic under its seed")
+    # 3. no silent drops + lost-token reconciliation
+    rep = kill_fleet.outcome_report()
+    if not rep["complete"]:
+        failures.append(f"unresolved requests after recovery: {rep['pending']}")
+    lw_lost = sum(w.get("lost_decode_tokens", 0) for w in kill["lost_windows"])
+    if kill["lost_tokens"] != lw_lost:
+        failures.append(
+            f"lost_tokens {kill['lost_tokens']} != lost_window sum {lw_lost}"
+        )
+    # 4. the crash cost something and the fleet absorbed it
+    if kill["failovers"] < 1:
+        failures.append("kill scenario produced no failover")
+    shed = rep["outcomes"].get("shed", 0)
+    done = rep["outcomes"].get("completed", 0) + rep["outcomes"].get("failed", 0)
+    if shed + done != rep["offered"]:
+        failures.append("outcome ledger does not partition the offered set")
+
+    out = {
+        "baseline": json.loads(_norm(base)),
+        "zero_fault": json.loads(_norm(zero)),
+        "kill_recover": json.loads(_norm(kill)),
+        "fault_log": [list(e) for e in kill_fleet.chaos.log],
+        "self_check_failures": failures,
+    }
+    path = pathlib.Path(__file__).resolve().parent / "BENCH_chaos.json"
+    path.write_text(json.dumps(out, indent=1, default=str))
+    print(f"\nwrote {path}")
+
+    if failures:
+        for f in failures:
+            print(f"chaos_bench: FAIL ({f})")
+        return 1
+    print("chaos_bench ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,6 +28,7 @@ MODULES = [
     "fig22_prefetch_acc",
     "table6_trace",
     "fleet_bench",
+    "chaos_bench",
     "straggler_bench",
     "tenant_interference",
     "tiered_decode_bench",

@@ -55,6 +55,48 @@ long-prompt admission waves — and ``fleet_stats()["tenants"]`` gains
 ``ttft_p50``/``ttft_p99`` (submit -> first generated token, virtual time)
 merged bucket-wise from the per-engine TTFT histograms.
 
+Failure modes & chaos (fleet/faults.py)
+---------------------------------------
+``ChaosEngine(fleet, [FaultEvent(...)])`` posts a seeded fault scenario
+into the run's virtual-time scheduler as first-class events (FAULT
+priority: faults at time t land before t's completions). The taxonomy and
+what each fault costs:
+
+* ``crash`` — the host dies. Its books survive only through its last
+  counter drain; the undrained remainder is quarantined (never folded into
+  fleet books) and reported as a quantified ``lost_window`` (undrained
+  steps, near/far deltas, discarded decode tokens). In-flight requests are
+  re-dispatched from their retained prompts: each charges its tenant's
+  ``failovers``/``lost_tokens`` books and re-enters the queue after
+  ``retry_backoff * attempt`` of virtual time, until ``max_retries`` is
+  exhausted (then ``failed:crash`` in the outcome ledger — nothing is
+  silently dropped). With ``duration > 0`` and an ElasticFleet attached, a
+  replacement host scales up after the outage window, near tier pre-warmed.
+* ``hang`` — the host stalls without dying. The router's per-dispatch
+  watchdog (``dispatch_timeout``, a scheduler-native TIMEOUT event) fires
+  in bounded virtual time and fails the host over; a recovery *before* the
+  watchdog is a transient stall (slots intact, no failover, no loss). The
+  dedup guard makes late completions of a failed-over step no-ops — a
+  slow-but-alive host can never double-count tokens.
+* ``slowdown`` — a transient speed multiplier; the event scheduler simply
+  reorders completions (no failover, no loss).
+* ``degrade`` — the host's near tier is evacuated at runtime and the
+  engine serves far-tier-only (same 1-dispatch/0-sync step budget), with
+  ``apply_placement`` epoch-fenced so a stale TierEpoch planned before the
+  failover is rejected instead of resurrecting the near set.
+
+Determinism is the point: the same seed replays the identical fault/retry
+event order, token streams and merged books — every chaos scenario is a
+regression test, not a flaky one. A zero-fault ChaosEngine is bit-exact
+with the plain event path. ``fleet_stats()`` carries the chaos surface
+(``failovers``, ``requests_retried``, ``lost_tokens``, ``lost_windows``,
+``crashed_replicas``, ``fault_events``); ``outcome_report()`` is the
+no-silent-drops ledger; the flight recorder emits ``fault``/``failover``/
+``retry`` markers with per-tenant ``recovery_vtime`` histograms. The chaos
+demo below kills one of three hosts mid-burst and recovers; see
+benchmarks/chaos_bench.py for the quantitative study and tests/
+test_chaos.py for the pinned invariants.
+
 Flight recorder (repro.obs)
 ---------------------------
 Pass ``build_fleet(recorder=FlightRecorder())`` (or set
@@ -80,6 +122,8 @@ from repro.configs.workloads import get_profile
 from repro.data.requests import RequestGenerator, interleave
 from repro.fleet import (
     AdmissionController,
+    ChaosEngine,
+    FaultEvent,
     SLOModel,
     build_fleet,
     export_all,
@@ -223,6 +267,41 @@ def serve_straggler_autoscale(trace_path=None):
     return stats, val
 
 
+def serve_chaos(n_requests: int = 18):
+    """Kill one of three hosts mid-burst, recover with a replacement.
+
+    The crash salvages the dead host's drained books, quarantines the
+    undrained remainder as a ``lost_window``, and re-dispatches stranded
+    requests — the outcome ledger must come back complete (every admitted
+    request completed, shed, or failed-with-reason)."""
+    fleet = build_fleet(
+        3, policy="least-loaded", n_pages=N_PAGES, trace_window=16, trace_period=32,
+        autotier=dict(near_frac=0.30, epoch_steps=8),
+        elastic=dict(min_replicas=1, max_replicas=4),
+    )
+    chaos = ChaosEngine(
+        fleet,
+        [FaultEvent(6.0, "crash", rid=1, duration=6.0)],
+        dispatch_timeout=8.0, max_retries=3,
+    )
+    prof = dataclasses.replace(
+        get_profile("Web1"), prompt_mean=24, decode_mean=6, prefix_share=0.9, n_prefixes=3
+    )
+    gen = RequestGenerator(prof, vocab_size=fleet_vocab(), seed=0)
+    stats = fleet.run(gen, n_requests=n_requests, max_steps=400, submit_per_step=3)
+    print(f"[chaos] {stats['requests_finished']} finished, "
+          f"{stats['failovers']} failovers, {stats['requests_retried']} retried, "
+          f"{stats['lost_tokens']} decode tokens lost")
+    for vtime, action, rid, applied in chaos.log:
+        print(f"  t={vtime:5.1f}  {action:>14}  host {rid}" + ("" if applied else "  (no-op)"))
+    for w in stats["lost_windows"]:
+        print(f"  host {w['rid']} lost_window: {w['steps_undrained']} undrained steps, "
+              f"{w['lost_decode_tokens']} decode tokens discarded")
+    rep = fleet.outcome_report()
+    print(f"  outcome ledger: {rep['outcomes']} (complete={rep['complete']})")
+    return stats, rep
+
+
 def main(trace_path=None):
     rr, _ = serve("round-robin")
     print()
@@ -238,6 +317,9 @@ def main(trace_path=None):
     sa, sval = serve_straggler_autoscale(trace_path)
     assert any(e[1] == "up" for e in sa["scale_events"]), sa["scale_events"]
     assert sval["hit_ratio_error"] <= 0.05 and abs(sval["rw_ratio_error_pct"]) <= 5.0, sval
+    print()
+    cs, crep = serve_chaos()
+    assert cs["failovers"] >= 1 and crep["complete"], (cs["failovers"], crep)
     print("serve_fleet ok")
 
 

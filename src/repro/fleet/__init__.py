@@ -29,6 +29,10 @@ when aggregated across them. Module -> paper-section map:
 * ``elastic.py``  — replica set scales with load: scale-up warms its near
   tier from the fleet plan, scale-down drains and folds the host's profile
   into the aggregate.
+* ``faults.py``   — deterministic chaos: seeded crash/hang/slowdown/degrade
+  faults as first-class scheduler events, replica failover with retry and
+  dedup-guarded re-dispatch, crash salvage with quantified loss windows —
+  same seed, same run, bit for bit.
 
 ``build_fleet`` wires it together; examples/serve_fleet.py is the demo,
 benchmarks/fleet_bench.py the scaling study, and
@@ -53,6 +57,7 @@ from repro.fleet.aggregator import (
 )
 from repro.fleet.autotier import AutoTierer, TierEpoch
 from repro.fleet.elastic import ElasticFleet, ScaleEvent, restored_params_source
+from repro.fleet.faults import ChaosEngine, FaultEvent
 from repro.fleet.replica import Replica, ReplicaProfile
 from repro.fleet.router import (
     POLICIES,
@@ -72,6 +77,8 @@ __all__ = [
     "ElasticFleet",
     "ScaleEvent",
     "restored_params_source",
+    "ChaosEngine",
+    "FaultEvent",
     "Replica",
     "ReplicaProfile",
     "FleetRouter",

@@ -102,6 +102,10 @@ class AutoTierer:
         # shaped the service's histogram, so the plan keeps seeing it
         self.extra_profiles: List[ReplicaProfile] = []
         self._last_epoch = 0.0
+        # monotone plan sequence number, stamped on every push: engines
+        # fence on it after a failover so a plan computed from pre-fault
+        # profiles can never land on a host the fault machinery reset
+        self.epoch_seq = 0
 
     # ------------------------------------------------------------------
     def __call__(self, now: float):
@@ -119,12 +123,16 @@ class AutoTierer:
         counts = aggregator.aggregate_counts(profiles)
         if counts.size == 0 or counts.sum() == 0:
             return None
+        self.epoch_seq += 1
         p = tiering.plan(counts, self.specs)
         # the prefetch plane rides the placement epoch: one table trained
         # from every host's stream-tagged windows, pushed with the near set
         table = aggregator.train_fleet_successors(profiles)
         moved_before = sum(r.device_moved_bytes for r in self.replicas)
-        migrated = sum(r.apply_placement(p.hot_blocks) for r in self.replicas)
+        migrated = sum(
+            r.apply_placement(p.hot_blocks, epoch=self.epoch_seq)
+            for r in self.replicas
+        )
         if table:
             for r in self.replicas:
                 r.load_successors(table)

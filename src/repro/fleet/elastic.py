@@ -200,6 +200,26 @@ class ElasticFleet:
         )
         return victim
 
+    def retire_crashed(self, replica: Replica, now: float, reason: str = "crash"):
+        """Record a crash retirement in the scaling history.
+
+        The router's fault machinery already salvaged the host's books
+        (``router.crashed_stats`` / ``crashed_profiles`` / ``lost_windows``
+        — crash books are quarantined there, NOT folded into
+        ``retired_stats``, so drained and crashed history stay separately
+        attributable) and removed it from the shared replica list. This
+        hook records the topology event and resets the decision clock so
+        the autoscaler doesn't immediately react to its own casualty. A
+        host that was already draining when it crashed is retired exactly
+        once, here: it is gone from the shared list, so a pending
+        ``_retire_drained`` can never see it again."""
+        self._last_decision = now
+        self._record_event(
+            ScaleEvent(
+                now, "crash", replica.rid, len(self.router.active_replicas), reason
+            )
+        )
+
     def _retire_drained(self, now: float):
         """Remove fully drained hosts, folding their profile into the
         fleet aggregate so their history survives them."""

@@ -106,6 +106,12 @@ class Replica:
         self.created_at = 0.0  # fleet vtime this host joined (elastic)
         self.busy = False  # a step is in flight on the event scheduler
         self.draining = False
+        # fault state (fleet/faults.py): a dead host is removed from the
+        # fleet after crash salvage; a hung host stays listed but is
+        # quarantined from dispatch until its fault's recovery event clears
+        # the flag (its engine was purged at failover — it rejoins empty)
+        self.alive = True
+        self.hung = False
         self.steps_done = 0
         engine.access_hooks.append(self._on_access)
         # flight-recorder identity: span tracks and metric series from this
@@ -153,9 +159,36 @@ class Replica:
     def drained(self) -> bool:
         return self.draining and self.idle and not self.busy
 
-    def apply_placement(self, near_ids: np.ndarray) -> int:
+    def apply_placement(self, near_ids: np.ndarray, epoch: Optional[int] = None) -> int:
         self.engine.external_placement = True
-        return self.engine.apply_placement(near_ids)
+        return self.engine.apply_placement(near_ids, epoch=epoch)
+
+    # ------------------------------------------------------------------
+    # crash protocol (fleet/faults.py): inventory what died, salvage books
+
+    def crash_salvage(self, now: float) -> dict:
+        """Inventory a crashed host before retirement.
+
+        The host-visible books — everything the last drain boundary folded
+        in, every token already streamed — survive a crash by construction.
+        What dies is (a) the device counter plane accumulated since that
+        boundary, quarantined here via the discard drain and reported as
+        the ``lost_window``, and (b) the in-flight decode progress of
+        resident requests, reported as ``lost_decode_tokens`` (the work
+        their failover re-dispatch must redo). After this call every
+        subsequent drain on the engine sees a clean plane and charges
+        nothing — the idempotent-drain guarantee is what makes the
+        follow-up ``export_profile``/``stats`` reads crash-safe.
+        """
+        stranded = self.engine.stranded_requests()
+        lost = self.engine.lost_window()
+        lost.update(
+            rid=self.rid,
+            vtime=float(now),
+            inflight=len(stranded),
+            lost_decode_tokens=int(sum(d for _, d in stranded)),
+        )
+        return lost
 
     # ------------------------------------------------------------------
     def export_profile(self) -> ReplicaProfile:

@@ -40,7 +40,7 @@ from repro.data.requests import Request, RequestGenerator
 from repro.env import env_flag
 from repro.fleet.admission import AdmissionController, SLOModel
 from repro.fleet.replica import Replica, ReplicaProfile
-from repro.fleet.scheduler import ARRIVAL, VirtualScheduler
+from repro.fleet.scheduler import ARRIVAL, TIMEOUT, VirtualScheduler
 from repro.obs import (
     Histogram,
     MetricSnapshot,
@@ -163,6 +163,38 @@ class FleetRouter:
         self.mode = "idle"
         self.elastic = None  # ElasticFleet, attached by build_fleet
         self.autotierer = None  # AutoTierer, attached by build_fleet
+        self.chaos = None  # ChaosEngine, attached by fleet/faults.py
+        # callbacks invoked with each run's fresh scheduler before any
+        # event executes — the chaos engine posts its fault events here
+        self.on_run_start: List = []
+        # ---- failure machinery (fleet/faults.py forces these into use) --
+        # per-dispatch watchdog: a started step that hasn't completed
+        # within this much virtual time is declared hung and failed over.
+        # None (default) disables the watchdog — zero scheduling overhead
+        # and bit-identical event books either way (cancelled timeouts
+        # leave no trace; see scheduler.py).
+        self.dispatch_timeout: Optional[float] = None
+        self.max_retries = 3
+        self.retry_backoff = 1.0  # re-queue delay: backoff * attempt number
+        # in-flight step dedup guard: replica rid -> (step seq, timeout
+        # Event). A completion or timeout whose seq no longer matches is
+        # stale — its step was failed over — and must be a no-op, which is
+        # what stops a slow-but-alive host's late completion from double-
+        # counting tokens its retry already re-decoded elsewhere.
+        self._pending: Dict[int, tuple] = {}
+        self._step_seq = 0
+        # terminal outcome ledger: every rid that enters the fleet ends as
+        # "completed", "shed", or "failed:<reason>" — outcome_report()
+        # flags anything still pending (the no-silent-drops invariant)
+        self.admitted_rids: set = set()
+        self.outcomes: Dict[int, str] = {}
+        self.attempts: Dict[int, int] = {}
+        self.owner: Dict[int, int] = {}  # rid -> replica rid serving it
+        self._fin_seen: Dict[int, int] = {}  # replica rid -> finished[] index
+        # crash-retirement books (salvaged host stats + quantified loss)
+        self.crashed_stats: List[dict] = []
+        self.crashed_profiles: List[ReplicaProfile] = []
+        self.lost_windows: List[dict] = []
         # unified metrics plane: the router's registry carries the fleet-
         # scoped series (routed/shed counters, queue-wait histograms); the
         # fleet metric view is merge_snapshots over this + every replica
@@ -219,8 +251,11 @@ class FleetRouter:
 
     @property
     def active_replicas(self) -> List[Replica]:
-        """Replicas eligible for new work (draining hosts excluded)."""
-        return [r for r in self.replicas if not r.draining]
+        """Replicas eligible for new work (draining, dead and quarantined-
+        hung hosts excluded)."""
+        return [
+            r for r in self.replicas if not r.draining and r.alive and not r.hung
+        ]
 
     # ------------------------------------------------------------------
     # offer / dispatch
@@ -236,12 +271,14 @@ class FleetRouter:
         ):
             self.shed += 1
             self.shed_by[tenant] = self.shed_by.get(tenant, 0) + 1
+            self.outcomes[req.rid] = "shed"
             self.metrics.counter("shed", tenant=tenant).inc()
             if self.recorder is not None:
                 self.recorder.instant("shed", req.rid, self._now, tenant=tenant)
             return False
         self.tenant_queues.setdefault(tenant, deque()).append(req)
         self._enqueue_time[id(req)] = self._now
+        self.admitted_rids.add(req.rid)
         self.metrics.counter("admitted", tenant=tenant).inc()
         if self.recorder is not None:
             self.recorder.instant("admit", req.rid, self._now, tenant=tenant)
@@ -268,6 +305,7 @@ class FleetRouter:
             req = self.tenant_queues[tenant].popleft()
             chosen = targets[self.policy.choose(req, targets)]
             chosen.submit(req)
+            self.owner[req.rid] = chosen.rid
             wait = self._now - self._enqueue_time.pop(id(req), self._now)
             self.wait_samples.setdefault(tenant, []).append(wait)
             self.metrics.histogram("queue_wait", tenant=tenant).record(wait)
@@ -301,7 +339,10 @@ class FleetRouter:
     def step(self) -> int:
         """One barrier step: every replica advances once, the fleet clock
         advances by the SLOWEST replica's cost — the straggler tax."""
-        decoded = sum(r.step() for r in self.replicas)
+        decoded = 0
+        for r in self.replicas:
+            decoded += r.step()
+            self._note_finished(r)
         self.fleet_steps += 1
         self._now += max(r.step_cost for r in self.replicas)
         for r in self.replicas:
@@ -354,6 +395,11 @@ class FleetRouter:
         return self.fleet_stats()
 
     def _run_lockstep(self, pending, max_steps, submit_per_step):
+        if self.chaos is not None and getattr(self.chaos, "events", ()):
+            raise ValueError(
+                "fault injection requires the event-driven mode: faults are "
+                "scheduler events, and lockstep has no scheduler"
+            )
         self.mode = "lockstep"
         if submit_per_step is None:
             for req in pending:
@@ -375,6 +421,10 @@ class FleetRouter:
         sched.now = self._now
         self.scheduler = sched
         horizon = self._now + float(max_steps)
+        # chaos engines (and any other fault source) post their events into
+        # the fresh scheduler here, before anything executes
+        for hook in list(self.on_run_start):
+            hook(sched)
 
         def quiescent(now: float):
             self._now = now
@@ -413,6 +463,7 @@ class FleetRouter:
         # be stuck busy forever and a follow-up run() could never step them
         for r in self.replicas:
             r.busy = False
+        self._pending.clear()  # in-flight dedup entries die with the heap
         self._now = sched.now
         # event mode has no barrier iterations; report virtual-time ticks
         # elapsed — the lockstep-equivalent step count at nominal speeds
@@ -421,18 +472,36 @@ class FleetRouter:
 
     def _start_steps(self, sched: VirtualScheduler):
         """Begin a step on every replica that has work and no step in
-        flight (draining hosts keep stepping to empty their backlog)."""
+        flight (draining hosts keep stepping to empty their backlog; dead
+        and hung hosts never restart one).
+
+        Each started step registers a dedup entry (rid -> (seq, timeout
+        event)). The completion consumes the entry and cancels its timeout
+        — a cancelled timeout is swept without advancing the clock or
+        forming a batch, so with no faults the event books are bit-exact
+        with the watchdog-free path. A completion that finds its entry
+        gone (or superseded) is stale: the step was failed over, and
+        running it would double-count tokens the retry re-decoded — it
+        no-ops instead."""
         for r in list(self.replicas):
-            if r.busy or r.load <= 0:
+            if r.busy or r.load <= 0 or not r.alive or r.hung:
                 continue
             r.busy = True
             t_begin = sched.now
+            self._step_seq += 1
+            seq = self._step_seq
 
-            def complete(r=r, t_begin=t_begin):
+            def complete(r=r, t_begin=t_begin, seq=seq):
+                ent = self._pending.get(r.rid)
+                if ent is None or ent[0] != seq or not r.alive or r.hung:
+                    return  # stale: this step was failed over (dedup guard)
+                self._pending.pop(r.rid)
+                sched.cancel(ent[1])
                 self._now = sched.now
                 r.busy = False
                 r.clock = sched.now
                 decoded = r.step()
+                self._note_finished(r)
                 rec = self.recorder
                 if rec is not None and rec.step_spans:
                     rec.span(
@@ -440,6 +509,181 @@ class FleetRouter:
                     )
 
             sched.post(sched.now + r.step_cost, complete)
+            timeout_ev = None
+            if self.dispatch_timeout is not None:
+
+                def expire(r=r, seq=seq):
+                    self._on_step_timeout(r, seq)
+
+                timeout_ev = sched.post(
+                    t_begin + self.dispatch_timeout, expire, prio=TIMEOUT
+                )
+            self._pending[r.rid] = (seq, timeout_ev)
+
+    # ------------------------------------------------------------------
+    # failure machinery: watchdog, failover, crash retirement, retry
+
+    def _note_finished(self, r: Replica):
+        """Fold a replica's newly finished seq ids (engine seq id == request
+        rid) into the terminal-outcome ledger. Runs after every engine step
+        in both stepping modes, so completions are recorded at the batch
+        they happen — a later failover of the same host cannot retro-lose
+        them."""
+        fin = r.engine.finished
+        seen = self._fin_seen.get(r.rid, 0)
+        if len(fin) > seen:
+            for rid in fin[seen:]:
+                self.outcomes[rid] = "completed"
+                self.owner.pop(rid, None)
+            self._fin_seen[r.rid] = len(fin)
+
+    def _on_step_timeout(self, r: Replica, seq: int):
+        """Watchdog expiry for one dispatched step. A consumed or
+        superseded dedup entry means the step completed (its completion
+        cancelled this event — we only get here through a race the
+        scheduler's ordering actually forbids) or was already failed over;
+        a live entry past the deadline is a hung host."""
+        ent = self._pending.get(r.rid)
+        if ent is None or ent[0] != seq or not r.alive:
+            return
+        self._fail_replica(r, self.scheduler.now, reason="timeout", crash=False)
+
+    def _fail_replica(self, r: Replica, now: float, reason: str, crash: bool):
+        """Fail one host over: quarantine (hang) or retire (crash) it,
+        abort its engine, and re-dispatch every stranded request.
+
+        The dedup entry is removed FIRST, so a slow-but-alive host's late
+        completion event finds nothing to match and no-ops — the retry's
+        re-decoded tokens are the only ones that count. Aborted requests'
+        discarded decode progress is charged to per-tenant ``lost_tokens``
+        (the work the retry redoes); a crash additionally quarantines the
+        host's undrained device counter plane as a ``lost_window`` (see
+        Replica.crash_salvage)."""
+        ent = self._pending.pop(r.rid, None)
+        if ent is not None and self.scheduler is not None:
+            self.scheduler.cancel(ent[1])
+        self._now = now
+        # completions already in the engine's books stay counted
+        self._note_finished(r)
+        if crash:
+            r.alive = False
+            r.busy = False
+            stranded = self._retire_crashed(r, now, reason)
+        else:
+            r.hung = True  # quarantined until a recovery event clears it
+            stranded = r.engine.abort_all()
+        self.metrics.counter("replica_failures", reason=reason).inc()
+        if self.recorder is not None:
+            self.recorder.instant(
+                "failover",
+                -1,
+                now,
+                replica=r.rid,
+                reason=reason,
+                crash=crash,
+                inflight=len(stranded),
+            )
+        for req, discarded in stranded:
+            if discarded:
+                self.metrics.counter("lost_tokens", tenant=req.tenant).inc(discarded)
+            self._retry(req, now, reason)
+
+    def _retire_crashed(self, r: Replica, now: float, reason: str) -> list:
+        """Crash-path retirement: salvage the dead host's last-drain books,
+        quantify what the crash destroyed, remove it from the fleet.
+
+        Ordering matters: the salvage (read-only inventory + discard drain)
+        runs before the profile export, so the export's own drain sees a
+        clean plane and charges nothing — the host-visible history that
+        survives is exactly what the last real drain boundary folded in.
+        Returns the aborted (request, discarded_tokens) pairs for retry."""
+        lost = r.crash_salvage(now)
+        lost["reason"] = reason
+        self.lost_windows.append(lost)
+        prof = r.export_profile()
+        self.crashed_profiles.append(prof)
+        if self.autotierer is not None:
+            # a dead host's traffic still shaped the service's histogram
+            self.autotierer.extra_profiles.append(prof)
+        st = r.stats()
+        st["placement_near_hits"] = r.engine.placement.stats.near_hits
+        st["placement_far_hits"] = r.engine.placement.stats.far_hits
+        st["crashed"] = True
+        st["crash_reason"] = reason
+        self.crashed_stats.append(st)
+        stranded = r.engine.abort_all()
+        if r in self.replicas:
+            self.replicas.remove(r)
+        if self.elastic is not None:
+            self.elastic.retire_crashed(r, now, reason)
+        return stranded
+
+    def _retry(self, req: Request, now: float, reason: str):
+        """Re-dispatch one stranded request: re-queue (re-prefill from the
+        retained prompt — its KV pages died with the slot) after a linear
+        backoff, or declare it failed once retries are exhausted."""
+        tenant = req.tenant
+        self.metrics.counter("failovers", tenant=tenant).inc()
+        n = self.attempts.get(req.rid, 0) + 1
+        self.attempts[req.rid] = n
+        self.owner.pop(req.rid, None)
+        if n > self.max_retries:
+            self.outcomes[req.rid] = f"failed:{reason}"
+            self.metrics.counter("failed", tenant=tenant).inc()
+            if self.recorder is not None:
+                self.recorder.instant(
+                    "failed", req.rid, now, tenant=tenant, reason=reason, attempts=n - 1
+                )
+            return
+        self.metrics.counter("retries", tenant=tenant).inc()
+        if self.recorder is not None:
+            self.recorder.instant(
+                "retry", req.rid, now, tenant=tenant, reason=reason, attempt=n
+            )
+        delay = self.retry_backoff * n
+        sched = self.scheduler
+        if sched is not None and delay > 0:
+            sched.post(now + delay, lambda req=req: self._requeue(req), prio=ARRIVAL)
+        else:
+            self._requeue(req)
+
+    def _requeue(self, req: Request):
+        """Put a failed-over request back at the tail of its tenant queue
+        (dispatch pulls it at the next completion batch)."""
+        if self.scheduler is not None:
+            self._now = self.scheduler.now
+        self.tenant_queues.setdefault(req.tenant, deque()).append(req)
+        self._enqueue_time[id(req)] = self._now
+        if self.recorder is not None:
+            self.recorder.begin("queue", req.rid, self._now, tenant=req.tenant, retry=True)
+
+    def outcome_report(self) -> dict:
+        """Terminal-outcome ledger: every request that entered the fleet
+        must end ``completed``, ``shed``, or ``failed:<reason>``. Anything
+        admitted but unresolved is listed in ``pending`` — the no-silent-
+        drops invariant chaos tests assert empty (a truncated horizon or an
+        unrecovered last host legitimately leaves work pending; a completed
+        run must not)."""
+        counts: Dict[str, int] = {}
+        for o in self.outcomes.values():
+            key = "failed" if o.startswith("failed") else o
+            counts[key] = counts.get(key, 0) + 1
+        pending = sorted(r for r in self.admitted_rids if r not in self.outcomes)
+        return {
+            "offered": len(self.outcomes) + len(pending),
+            "admitted": len(self.admitted_rids),
+            "outcomes": counts,
+            "pending": pending,
+            "failed": {
+                r: o for r, o in sorted(self.outcomes.items()) if o.startswith("failed")
+            },
+            "complete": not pending,
+        }
+
+    def _tenant_count(self, name: str, tenant: str) -> int:
+        """Non-creating per-tenant counter read (no empty series growth)."""
+        c = self.metrics._counters.get((name, (("tenant", tenant),)))
+        return 0 if c is None else c.value
 
     # ------------------------------------------------------------------
     def export_profiles(self) -> List[ReplicaProfile]:
@@ -448,14 +692,18 @@ class FleetRouter:
         profs = [r.export_profile() for r in self.replicas]
         if self.elastic is not None:
             profs += list(self.elastic.retired_profiles)
+        profs += list(self.crashed_profiles)
         return profs
 
     def fleet_stats(self) -> dict:
         per = [r.stats() for r in self.replicas]
         retired = list(self.elastic.retired_stats) if self.elastic is not None else []
-        # retired hosts' service history stays in the fleet totals — a
-        # scale-down must not make served traffic disappear from the books
-        both = per + retired
+        # retired AND crashed hosts' service history stays in the fleet
+        # totals — neither a scale-down nor a failure makes served traffic
+        # disappear from the books (what a crash destroys is quantified
+        # separately in lost_windows, never silently)
+        gone = retired + list(self.crashed_stats)
+        both = per + gone
         agg = {
             k: sum(s[k] for s in both)
             for k in (
@@ -466,9 +714,9 @@ class FleetRouter:
             )
         }
         hits = sum(r.engine.placement.stats.near_hits for r in self.replicas)
-        hits += sum(s["placement_near_hits"] for s in retired)
+        hits += sum(s["placement_near_hits"] for s in gone)
         tot = hits + sum(r.engine.placement.stats.far_hits for r in self.replicas)
-        tot += sum(s["placement_far_hits"] for s in retired)
+        tot += sum(s["placement_far_hits"] for s in gone)
         agg["near_hit_rate"] = hits / max(tot, 1)
         agg["shared_mappings"] = sum(s["pagetable"]["shared_mappings"] for s in both)
         agg["fleet_steps"] = self.fleet_steps
@@ -478,6 +726,17 @@ class FleetRouter:
         agg["routed"] = self.routed
         agg["shed"] = self.shed
         agg["policy"] = getattr(self.policy, "name", type(self.policy).__name__)
+        # fault/failover books (all zero/empty on a fault-free run, and
+        # present in BOTH stepping modes so chaos reports diff cleanly)
+        agg["requests_failed"] = sum(
+            1 for o in self.outcomes.values() if o.startswith("failed")
+        )
+        agg["requests_retried"] = int(self.metrics.total("retries"))
+        agg["failovers"] = int(self.metrics.total("replica_failures"))
+        agg["lost_tokens"] = int(self.metrics.total("lost_tokens"))
+        agg["crashed_replicas"] = [s["rid"] for s in self.crashed_stats]
+        agg["lost_windows"] = [dict(w) for w in self.lost_windows]
+        agg["fault_events"] = list(self.chaos.log) if self.chaos is not None else []
         agg["simulated_throughput"] = simulated_throughput(agg)
         agg["tenants"] = self.tenant_report(both)
         agg["per_replica"] = per
@@ -512,6 +771,13 @@ class FleetRouter:
             o["shed"] = self.shed_by.get(t, 0)
             o["shed_rate"] = o["shed"] / max(o["routed"] + o["shed"], 1)
             o["queued"] = self.queued(t)
+            # fault columns only appear once a tenant was actually touched
+            # by a failure — a fault-free run's report is byte-identical to
+            # the pre-chaos one (the lockstep/event equivalence surface)
+            for k in ("retries", "failovers", "failed", "lost_tokens"):
+                v = self._tenant_count(k, t)
+                if v:
+                    o[k] = v
             # queue-wait percentiles come from the mergeable exponential
             # histogram (deterministic bucket upper bounds, ~9% relative
             # error at the default growth) — NOT np.percentile over the raw
@@ -560,6 +826,7 @@ class FleetRouter:
             snaps += [
                 p.metrics for p in self.elastic.retired_profiles if p.metrics is not None
             ]
+        snaps += [p.metrics for p in self.crashed_profiles if p.metrics is not None]
         return snaps
 
     def fleet_metrics(self) -> MetricSnapshot:

@@ -130,6 +130,7 @@ class FlightRecorder:
     def merged_snapshot(self) -> MetricSnapshot:
         self.metrics.gauge("spans_dropped").set(self.spans.dropped)
         self.metrics.gauge("spans_emitted").set(self.spans.emitted)
+        self.metrics.gauge("spans_double_end").set(self.spans.double_end)
         return merge_snapshots(
             [self.metrics.snapshot()] + [r.snapshot() for r in self.extra_registries]
         )

@@ -50,7 +50,12 @@ class SpanRecorder:
         self.spans: Deque[Span] = deque()
         self.dropped = 0
         self.emitted = 0
+        self.double_end = 0  # ends on an already-closed span (retry paths)
         self._open: Dict[Tuple[int, str], Span] = {}
+        # recently-closed keys (bounded like the ring): lets ``end`` tell a
+        # double-end apart from an end that never had a begin
+        self._closed: set = set()
+        self._closed_order: Deque[Tuple[int, str]] = deque()
 
     # ------------------------------------------------------------------
     def _push(self, span: Span):
@@ -80,15 +85,35 @@ class SpanRecorder:
             self._push(prev)
         self._open[key] = Span(name, trace, float(t), float(t), tenant, replica, SPAN, args)
 
+    def _note_closed(self, key: Tuple[int, str]):
+        if key in self._closed:
+            return
+        self._closed.add(key)
+        self._closed_order.append(key)
+        if len(self._closed_order) > self.capacity:
+            self._closed.discard(self._closed_order.popleft())
+
     def end(self, name: str, trace: int, t: float, **args) -> Optional[Span]:
-        """Close an open span at virtual time ``t``; unmatched ends are
-        recorded as instants so a lifecycle bug shows up in the trace
-        instead of vanishing."""
-        span = self._open.pop((trace, name), None)
+        """Close an open span at virtual time ``t``.
+
+        Ending an already-closed span again — retry/re-dispatch paths do
+        this when a failover and a late completion both try to close the
+        same lifecycle span — records NOTHING and bumps the ``double_end``
+        book: exactly one span per begin reaches the ring, and the open-
+        span table is never corrupted by the second close. An end whose
+        key was never begun (nor recently closed) is still recorded as an
+        ``unmatched`` instant so a genuine lifecycle bug shows up in the
+        trace instead of vanishing."""
+        key = (trace, name)
+        span = self._open.pop(key, None)
         if span is None:
+            if key in self._closed:
+                self.double_end += 1
+                return None
             span = Span(name, trace, float(t), float(t), kind=INSTANT, args={"unmatched": True})
         span.t1 = float(t)
         span.args.update(args)
+        self._note_closed(key)
         self._push(span)
         return span
 

@@ -222,6 +222,7 @@ class _Slot:
     chunk: Optional[ChunkState] = None
     chunks_done: int = 0  # prefill chunks this occupancy has dispatched
     shared_pages: int = 0  # prefix pages shared at admit (span labeling)
+    decode_assigned: int = 0  # decode budget granted at admit (abort books)
 
     @property
     def active(self) -> bool:
@@ -309,6 +310,18 @@ class ServingEngine:
         # when True, a fleet-level planner owns placement (apply_placement);
         # the local TPP epoch is suppressed so the two don't fight
         self.external_placement = False
+        # degraded far-tier-only mode: the near tier is capacity-zeroed at
+        # runtime (enter_degraded). Placement planning, prefetch promotion
+        # and external pushes are all suspended; lookups keep flowing
+        # through the same single segmented dispatch, every read a far hit.
+        self.degraded = False
+        # epoch fence for apply_placement: plans stamped with an epoch at
+        # or below the fence predate a failover/degrade transition and are
+        # rejected as stale instead of resurrecting a dead tier view
+        self._placement_fence = 0
+        # engine step of the last counter-plane drain — what lost_window()
+        # uses to size the undrained remainder a crash leaves behind
+        self._last_drain_step = 0
         # virtual-time cost of one engine step for the fleet's event
         # scheduler; replace to model batch- or far-traffic-dependent step
         # latency. Must stay constant at 1.0 for lockstep-exact replays.
@@ -551,6 +564,7 @@ class ServingEngine:
         self._m_prefill_saved.inc(share["shared"] * self.ecfg.page_size)
         slot.seq_id = req.rid
         slot.remaining = decode_len
+        slot.decode_assigned = decode_len
         slot.request = req
         slot.t_admit = self.now()
         slot.start_step = self.engine_steps
@@ -743,6 +757,7 @@ class ServingEngine:
         drain boundaries), so every registry series inherits the invariant.
         """
         d = None
+        self._last_drain_step = self.engine_steps
         if self.tiered is not None:
             d = self.tiered.drain_counters()
             if d["near"] or d["far"]:
@@ -1018,7 +1033,11 @@ class ServingEngine:
         # TPP epoch (skipped when a fleet planner drives placement)
         if self.engine_steps % self.ecfg.placement_window == 0:
             self.drain_tier_counters()
-            if not self.external_placement:
+            # degraded mode suspends placement planning and prefetch
+            # promotion — there is no near capacity to plan into — but the
+            # boundary drain above still runs: far hits keep charging the
+            # books at the same cadence, so degraded books stay exact
+            if not self.external_placement and not self.degraded:
                 wins = self.profiler.windows("kv")
                 if wins:
                     self.placement.step(wins[-1])
@@ -1027,7 +1046,7 @@ class ServingEngine:
             # boundary drain, so its apply_placement-style migration sees a
             # clean counter plane and costs ZERO additional host syncs
             # (drain_counters early-returns while the plane is clean)
-            if self.ecfg.prefetch_promote:
+            if self.ecfg.prefetch_promote and not self.degraded:
                 if self.prefetch.predictor == "trace":
                     # local training is tenant-partitioned like the fleet
                     # push: trace streams are seq ids, and _seq_tenant maps
@@ -1232,15 +1251,46 @@ class ServingEngine:
                 a += prefill_weight * s.chunk.remaining
         return q + a
 
-    def apply_placement(self, near_ids: np.ndarray) -> int:
+    def apply_placement(self, near_ids: np.ndarray, epoch: Optional[int] = None) -> int:
         """Push an externally-planned near-tier set (fleet autotier).
 
         Replaces the local TPP view wholesale; returns number of pages whose
         tier changed (the migration traffic this push costs).
+
+        ``epoch`` is the planner's TierEpoch sequence number. A push whose
+        epoch is at or below the engine's placement fence was planned from
+        profiles gathered BEFORE a failover/degrade transition on this host
+        — applying it would resurrect a tier view the failover invalidated
+        — so it is rejected (counted, recorded, zero pages moved). Pushes
+        while degraded are rejected the same way: there is no near
+        capacity for the plan to land in.
         """
         # drain first: hits observed under the outgoing tier map are charged
         # before the map changes, so every epoch's books are exact
         self.drain_tier_counters()
+        if epoch is not None and int(epoch) <= self._placement_fence:
+            self.metrics.counter("placement_rejected", reason="stale_epoch").inc()
+            if self.recorder is not None:
+                self.recorder.instant(
+                    "placement_rejected", -1, self.now(), replica=self.host_rid,
+                    reason="stale_epoch", epoch=int(epoch), fence=self._placement_fence,
+                )
+            return 0
+        if self.degraded:
+            self.metrics.counter("placement_rejected", reason="degraded").inc()
+            if self.recorder is not None:
+                self.recorder.instant(
+                    "placement_rejected", -1, self.now(), replica=self.host_rid,
+                    reason="degraded",
+                )
+            return 0
+        return self._apply_near_set(near_ids)
+
+    def _apply_near_set(self, near_ids: np.ndarray) -> int:
+        """Unconditional tier rewrite — the body ``apply_placement`` guards.
+        ``enter_degraded`` calls this directly with the empty set (the
+        demote-all transition must run even while the degraded flag is up).
+        """
         # same sanitize rule as the device store, or the two tier views
         # diverge; dedup must precede the capacity cut so duplicate ids
         # neither double-count promotions nor shrink the near set
@@ -1273,6 +1323,127 @@ class ServingEngine:
                 bytes=(promoted + demoted) * self.placement.block_bytes,
             )
         return promoted + demoted
+
+    # ------------------------------------------------------------------
+    # failure machinery: degraded mode, epoch fencing, abort/strand books
+
+    def fence_placement(self, epoch: int):
+        """Raise the placement fence: plans stamped at or below ``epoch``
+        predate this failover transition and will be rejected as stale."""
+        self._placement_fence = max(self._placement_fence, int(epoch))
+
+    def enter_degraded(self, fence_epoch: Optional[int] = None) -> int:
+        """Drop to far-tier-only serving: the near tier is capacity-zeroed
+        at runtime (host fault poisoned it or its HBM partition is gone).
+
+        One accounting boundary: drain hits observed under the old map,
+        then demote every resident near row through the real migration
+        path — demote-first is what preserves the data, since rows in a
+        dead near tier would otherwise be lost while the far mirror is
+        stale. Placement planning, prefetch promotion and external pushes
+        are suspended until ``exit_degraded``; the decode hot path is
+        untouched (same single segmented dispatch, every read a far hit),
+        so the 1-dispatch/0-mandatory-sync step budget survives the mode.
+        Returns pages whose tier changed. Idempotent.
+        """
+        if self.degraded:
+            return 0
+        self.drain_tier_counters()
+        self.degraded = True
+        if self.tiered is not None:
+            self.tiered.set_degraded(True)
+        if fence_epoch is not None:
+            self.fence_placement(fence_epoch)
+        changed = self._apply_near_set(np.empty(0, np.int64))
+        self.metrics.counter("degraded_entries").inc()
+        if self.recorder is not None:
+            self.recorder.instant(
+                "degraded", -1, self.now(), replica=self.host_rid,
+                demoted=changed,
+            )
+        return changed
+
+    def exit_degraded(self, fence_epoch: Optional[int] = None):
+        """Restore near-tier capacity. The near set stays empty until the
+        next placement epoch (local TPP or a post-fence fleet push) refills
+        it — recovery is a planning decision, not a blind restore of the
+        pre-fault set. Idempotent."""
+        if not self.degraded:
+            return
+        self.degraded = False
+        if self.tiered is not None:
+            self.tiered.set_degraded(False)
+        if fence_epoch is not None:
+            self.fence_placement(fence_epoch)
+        if self.recorder is not None:
+            self.recorder.instant("restored", -1, self.now(), replica=self.host_rid)
+
+    def stranded_requests(self) -> List[Tuple[Request, int]]:
+        """Read-only view of every request this engine would strand if it
+        vanished right now: queued requests plus slot residents, each with
+        the decode tokens already produced for it (work a failover must
+        redo). Crash paths use this — the dead host's state is never
+        mutated, just inventoried."""
+        out: List[Tuple[Request, int]] = [(r, 0) for r in self.queue]
+        for slot in self.slots:
+            if slot.active:
+                done = 0 if slot.chunk is not None else slot.decode_assigned - slot.remaining
+                out.append((slot.request, max(0, done)))
+        return out
+
+    def abort_all(self) -> List[Tuple[Request, int]]:
+        """Abort every queued and resident request (hung-host quarantine).
+
+        Frees pagetable mappings, predictor streams and slots so a later
+        re-dispatch of the same rid — here or on another replica —
+        re-prefills cleanly from the request's retained prompt. Returns
+        (request, decode_tokens_discarded) pairs; tokens already decoded
+        stay in the books (they were really computed and streamed), the
+        discarded count is the progress the retry will redo.
+        """
+        out: List[Tuple[Request, int]] = []
+        for req in self.queue:
+            self._enq_vt.pop(req.rid, None)
+            self._enq_wall.pop(req.rid, None)
+            out.append((req, 0))
+        self.queue.clear()
+        for slot in self.slots:
+            if not slot.active:
+                continue
+            req = slot.request
+            done = 0 if slot.chunk is not None else slot.decode_assigned - slot.remaining
+            self.pagetable.free_sequence(slot.seq_id)
+            self.prefetch.drop_stream(slot.seq_id)
+            self._enq_vt.pop(slot.seq_id, None)
+            self._enq_wall.pop(slot.seq_id, None)
+            slot.seq_id = -1
+            slot.request = None
+            slot.chunk = None
+            slot.remaining = 0
+            out.append((req, max(0, done)))
+        if out:
+            self.metrics.counter("requests_aborted").inc(len(out))
+        return out
+
+    def lost_window(self) -> dict:
+        """Quantify the undrained remainder a crash leaves behind.
+
+        The device counter plane since the last drain boundary is the one
+        book a dead host cannot report; this materializes it via the
+        quarantine drain (``discard=True`` — the deltas are returned but
+        never folded into the host books or charged as a sync, so they can
+        never leak into the fleet merge) and sizes it in steps. Everything
+        already drained — the host-visible books — survives the crash by
+        construction; ``salvaged + lost_window`` is therefore invariant
+        under drain cadence.
+        """
+        steps = self.engine_steps - self._last_drain_step
+        out = {"steps_undrained": int(steps), "near": 0, "far": 0}
+        if self.tiered is not None:
+            d = self.tiered.drain_counters(discard=True)
+            out["near"] = int(d["near"])
+            out["far"] = int(d["far"])
+        return out
 
     def live_counters(self) -> dict:
         """Ground-truth counters the fleet aggregator validates against."""

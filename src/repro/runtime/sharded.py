@@ -261,7 +261,7 @@ class ShardedTieredKV:
         return err
 
     # ------------------------------------------------------------------
-    def drain_counters(self) -> dict:
+    def drain_counters(self, discard: bool = False) -> dict:
         """Drain every shard's plane independently and merge by summation.
 
         One host sync per DIRTY shard (a clean shard's drain early-returns
@@ -269,8 +269,23 @@ class ShardedTieredKV:
         dict has the unsharded shape, so placement stats, tenant books and
         the role accumulator charge exactly as before; per-shard (near,
         far) deltas accumulate for ``take_shard_drains``.
+
+        ``discard=True`` quarantines every shard's deltas (the crash-path
+        ``lost_window`` semantics of TieredKVCache.drain_counters): no
+        shard books or shard-drain feed are charged.
         """
-        drains = [sh.drain_counters() for sh in self.shards]
+        drains = [sh.drain_counters(discard=discard) for sh in self.shards]
+        if discard:
+            role = np.zeros((N_ROLES, 2), np.int64)
+            for d in drains:
+                role += np.asarray(d["role"], np.int64)
+            return {
+                "near": sum(d["near"] for d in drains),
+                "far": sum(d["far"] for d in drains),
+                "slot": _padded_sum([np.asarray(d["slot"], np.int64) for d in drains]),
+                "tenant": _padded_sum([np.asarray(d["tenant"], np.int64) for d in drains]),
+                "role": role,
+            }
         for s, d in enumerate(drains):
             self._shard_drained[s]["near"] += d["near"]
             self._shard_drained[s]["far"] += d["far"]
@@ -292,6 +307,18 @@ class ShardedTieredKV:
         out = self._shard_drained
         self._shard_drained = [{"near": 0, "far": 0} for _ in self.shards]
         return out
+
+    # ------------------------------------------------------------------
+    @property
+    def degraded(self) -> bool:
+        return all(sh.degraded for sh in self.shards)
+
+    def set_degraded(self, flag: bool):
+        """Fan far-tier-only mode out to every shard: one logical replica
+        degrades as a unit (the mesh that lost its near capacity is shared
+        by all shards of the replica)."""
+        for sh in self.shards:
+            sh.set_degraded(flag)
 
     # ------------------------------------------------------------------
     def migrate(self, near_ids, account: bool = True) -> dict:

@@ -150,6 +150,11 @@ class TieredKVCache:
         self.ctr_role = jnp.zeros((N_ROLES, 2), jnp.int32)
         self.ctr_total = jnp.zeros((2,), jnp.int32)
         self._plane_dirty = False
+        # degraded far-tier-only mode: the near tier is capacity-zeroed at
+        # runtime (host poisoned / HBM partition lost). While set, every
+        # migrate resolves to the EMPTY near set — demote-only — so no
+        # placement push can land rows in a tier the failover declared dead.
+        self.degraded = False
 
     # ------------------------------------------------------------------
     @property
@@ -336,19 +341,36 @@ class TieredKVCache:
         self.dispatches += 1
         return rows[: ids.size - pad] if pad else rows
 
-    def drain_counters(self) -> dict:
+    def drain_counters(self, discard: bool = False) -> dict:
         """The ONE host sync of the counter plane: materialize the per-slot
         / per-tenant / total accumulators, zero them, and fold the totals
         into the host hit books. Draining every step or once per window
         charges identical books — the plane is a pure sum — which is the
         invariant the drain-equivalence test pins.
+
+        Idempotent: a clean (never-accumulated or already-drained) plane
+        returns all-zero deltas and charges NOTHING — no host sync, no
+        drain tick, no recharge — so crash/teardown paths may drain
+        defensively without corrupting the books. Safe on a partially-
+        initialized store (constructor interrupted before the plane
+        existed): treated as clean.
+
+        ``discard=True`` is the crash path: the deltas are materialized
+        and the plane zeroed, but the totals are QUARANTINED — not folded
+        into the host hit books and not charged as a host sync — because
+        they describe work a dead host never reported. The caller owns
+        them as the ``lost_window``; a subsequent normal drain sees a
+        clean plane and returns zeros, so the lost counts can never leak
+        back into the fleet merge.
         """
-        if not self._plane_dirty:
+        if not getattr(self, "_plane_dirty", False):
+            n_slots = self.ctr_slot.shape[0] if hasattr(self, "ctr_slot") else 0
+            n_tenants = self.ctr_tenant.shape[0] if hasattr(self, "ctr_tenant") else 0
             return {
                 "near": 0,
                 "far": 0,
-                "slot": np.zeros((self.ctr_slot.shape[0], 2), np.int64),
-                "tenant": np.zeros((self.ctr_tenant.shape[0], 2), np.int64),
+                "slot": np.zeros((n_slots, 2), np.int64),
+                "tenant": np.zeros((n_tenants, 2), np.int64),
                 "role": np.zeros((N_ROLES, 2), np.int64),
             }
         slot_c, tenant_c, role_c, total = (
@@ -363,10 +385,11 @@ class TieredKVCache:
         self.ctr_total = jnp.zeros_like(self.ctr_total)
         self._plane_dirty = False
         n, f = int(total[0]), int(total[1])
-        self.near_hits += n
-        self.far_hits += f
-        self.host_syncs += 1
-        self.drains += 1
+        if not discard:
+            self.near_hits += n
+            self.far_hits += f
+            self.host_syncs += 1
+            self.drains += 1
         return {"near": n, "far": f, "slot": slot_c, "tenant": tenant_c,
                 "role": role_c}
 
@@ -390,6 +413,14 @@ class TieredKVCache:
         return float(jnp.max(jnp.abs(rows - self.lookup_flat(ids))))
 
     # ------------------------------------------------------------------
+    def set_degraded(self, flag: bool):
+        """Flip far-tier-only mode. Entering does not move data by itself —
+        callers follow with ``migrate(())`` to demote the resident near rows
+        (ServingEngine.enter_degraded does both under one accounting
+        boundary)."""
+        self.degraded = bool(flag)
+
+    # ------------------------------------------------------------------
     def migrate(self, near_ids, account: bool = True) -> dict:
         """Reconcile the device tiers with a planned near set — REAL moves.
 
@@ -402,9 +433,15 @@ class TieredKVCache:
         ``account=False`` skips the moved_rows/moved_bytes accumulators:
         the constructor-time initial fill loads empty rows into position,
         it is not migration traffic.
+
+        While ``degraded`` the planned near set is forced EMPTY: resident
+        near rows demote (data preserved through the quantize path — the
+        capacity is what died, not the bits already read out) and no
+        promotion can land, whatever the caller planned.
         """
         want = np.zeros(self.n_pages, bool)
-        want[sanitize_near_ids(near_ids, self.n_pages, self.near_capacity)] = True
+        if not self.degraded:
+            want[sanitize_near_ids(near_ids, self.n_pages, self.near_capacity)] = True
         cur = self.tier_host == NEAR
         demote = np.flatnonzero(cur & ~want)
         promote = np.flatnonzero(~cur & want)

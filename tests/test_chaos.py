@@ -1,0 +1,426 @@
+"""Chaos-ready fleet: deterministic fault injection, failover, recovery.
+
+The contracts this file pins (ISSUE 10 acceptance):
+
+1. Determinism anchors: two identical-seed chaos runs are bit-identical
+   (fault log, fleet books, outcome ledger), and a ZERO-fault chaos config
+   — watchdog armed, no events — is bit-exact with the plain event-driven
+   path (cancelled timeout events leave no trace in the event order).
+2. Crash accounting: after a mid-burst kill the merged fleet counters
+   reconcile — the host-visible books survive through the last drain
+   boundary, the undrained remainder is quantified as ``lost_window`` +
+   per-tenant ``lost_tokens``, never silently dropped — and the split is
+   drain-cadence-invariant.
+3. Bounded termination: a hung replica cannot wedge ``router.run`` — the
+   per-dispatch watchdog fails it over within ``dispatch_timeout`` of
+   virtual time (satellite regression: this used to hang forever).
+4. No silent drops: every admitted rid ends ``completed``, ``shed`` or
+   ``failed:<reason>``; a slow-but-alive host's late completion is dedup-
+   guarded so retried work is never double-counted.
+5. Degraded mode: a host whose near tier is capacity-zeroed keeps serving
+   far-tier-only; epoch-fenced ``apply_placement`` rejects plans staled by
+   the transition.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.workloads import get_profile
+from repro.data.requests import RequestGenerator
+from repro.fleet import (
+    AdmissionController,
+    ChaosEngine,
+    FaultEvent,
+    SLOModel,
+    build_fleet,
+    fleet_vocab,
+)
+
+
+def _profile(**kw):
+    base = dict(prompt_mean=24, decode_mean=6, prefix_share=0.9, n_prefixes=3)
+    base.update(kw)
+    return dataclasses.replace(get_profile("Web1"), **base)
+
+
+def _fleet(n=2, **kw):
+    base = dict(
+        policy="least-loaded",
+        seed=0,
+        trace_window=16,
+        trace_period=32,
+        autotier=dict(near_frac=0.30, epoch_steps=8),
+    )
+    base.update(kw)
+    return build_fleet(n, **base)
+
+
+def _run(fleet, n_requests=12, seed=0, max_steps=400, submit_per_step=3):
+    gen = RequestGenerator(_profile(), vocab_size=fleet_vocab(), seed=seed)
+    return fleet.run(
+        gen, n_requests=n_requests, max_steps=max_steps,
+        submit_per_step=submit_per_step,
+    )
+
+
+def _norm(stats):
+    """Comparable fleet books: everything but the per-host object dumps."""
+    d = {k: v for k, v in stats.items() if k not in ("per_replica", "retired_replicas")}
+    return json.dumps(d, sort_keys=True, default=str)
+
+
+# ---------------------------------------------------------------------------
+# 1. determinism anchors
+
+
+def test_zero_fault_chaos_bit_exact_with_plain_event_path():
+    """The armed watchdog posts a timeout per dispatched step; every on-time
+    completion cancels its own. Cancelled events are swept without running,
+    without advancing the clock, without forming a batch — so the chaos
+    config with no faults must reproduce the vanilla run bit for bit."""
+    plain = _fleet()
+    s_plain = _run(plain)
+    chaotic = _fleet()
+    ChaosEngine(chaotic, [], dispatch_timeout=50.0)
+    s_chaos = _run(chaotic)
+    assert _norm(s_plain) == _norm(s_chaos)
+    assert chaotic.chaos.log == []
+    # the cancelled timeouts really existed (and really left no trace)
+    assert chaotic.scheduler.events_cancelled > 0
+    assert s_plain["sched_events"] == s_chaos["sched_events"] if "sched_events" in s_plain else True
+    assert chaotic.metrics.total("sched_events") == plain.metrics.total("sched_events")
+    assert chaotic.metrics.total("sched_batches") == plain.metrics.total("sched_batches")
+
+
+@pytest.mark.slow
+def test_identical_seed_chaos_runs_bit_identical():
+    def one(seed):
+        fleet = _fleet()
+        ChaosEngine.seeded(fleet, seed=seed, n_faults=3, horizon=30.0,
+                           dispatch_timeout=10.0)
+        stats = _run(fleet)
+        return _norm(stats), list(fleet.chaos.log), fleet.outcome_report()
+
+    a, b = one(7), one(7)
+    assert a == b
+    assert a[1], "seeded scenario injected nothing"
+    # a different seed is a different run (sanity that the anchor bites)
+    c = one(8)
+    assert c[1] != a[1]
+
+
+def test_seeded_scenario_is_a_pure_function_of_seed():
+    f1, f2 = _fleet(), _fleet()
+    e1 = ChaosEngine.seeded(f1, seed=3).events
+    e2 = ChaosEngine.seeded(f2, seed=3).events
+    assert e1 == e2 and len(e1) == 3
+
+
+# ---------------------------------------------------------------------------
+# 2. crash accounting
+
+
+def test_mid_burst_kill_reconciles_books():
+    fleet = _fleet()
+    ChaosEngine(fleet, [FaultEvent(5.0, "crash", rid=1)], dispatch_timeout=50.0)
+    stats = _run(fleet)
+    rep = fleet.outcome_report()
+    assert rep["complete"], rep
+    assert stats["crashed_replicas"] == [1]
+    assert stats["failovers"] == 1
+    assert stats["requests_retried"] > 0
+    # the loss is quantified, not silent: one lost window for the victim,
+    # and the discarded in-flight decode progress is on the books
+    (lw,) = stats["lost_windows"]
+    assert lw["rid"] == 1 and lw["vtime"] == 5.0
+    assert lw["lost_decode_tokens"] == stats["lost_tokens"]
+    # everything completed despite the kill; the fleet totals count every
+    # request exactly once (the dedup guard: no double-completions)
+    assert rep["outcomes"] == {"completed": 12}
+    assert stats["requests_finished"] == 12
+    # the dead host's salvaged history stays in the fleet merge
+    assert any(p.rid == 1 for p in fleet.export_profiles())
+    assert fleet.crashed_stats[0]["crashed"] is True
+
+
+@pytest.mark.slow
+def test_crash_loss_split_is_drain_cadence_invariant():
+    """Same kill under default cadence vs drain-every-batch: the fleet
+    books agree, and the every-batch run's lost window is empty — what a
+    crash destroys is EXACTLY the undrained remainder."""
+
+    def one(drain_every_batch):
+        fleet = _fleet()
+        if drain_every_batch:
+            fleet.on_step.append(
+                lambda now: [r.engine.drain_tier_counters() for r in fleet.replicas]
+            )
+        ChaosEngine(fleet, [FaultEvent(5.0, "crash", rid=1)], dispatch_timeout=50.0)
+        stats = _run(fleet)
+        return fleet, stats
+
+    f_win, s_win = one(False)
+    f_all, s_all = one(True)
+    for k in ("tokens_decoded", "requests_finished", "prefill_tokens",
+              "near_hit_rate", "lost_tokens", "virtual_time"):
+        assert s_win[k] == s_all[k], k
+    # faults strike before the completions of their batch, so nothing ran
+    # on the victim since the last quiescent drain: zero undrained steps
+    assert s_all["lost_windows"][0]["steps_undrained"] == 0
+    assert s_all["lost_windows"][0]["near"] == 0
+    assert s_all["lost_windows"][0]["far"] == 0
+
+
+@pytest.mark.slow
+def test_crash_with_replacement_host():
+    fleet = _fleet(elastic=dict(min_replicas=1, max_replicas=4, cooldown=1e9))
+    ChaosEngine(
+        fleet, [FaultEvent(5.0, "crash", rid=0, duration=6.0)], dispatch_timeout=50.0
+    )
+    stats = _run(fleet)
+    actions = [e.action for e in fleet.elastic.events]
+    assert "crash" in actions and "up" in actions
+    # the replacement is a NEW host (fresh rid), recovery span on the books
+    up = [e for e in fleet.elastic.events if e.action == "up"]
+    assert up[0].rid == 2 and up[0].vtime == 11.0
+    assert [a for (_, a, _, ok) in fleet.chaos.log if ok] == ["crash", "crash_recover"]
+    assert fleet.outcome_report()["complete"]
+    assert stats["requests_finished"] == 12
+
+
+# ---------------------------------------------------------------------------
+# 3. bounded termination under hangs (satellite regression)
+
+
+def test_hung_replica_fails_over_within_timeout():
+    """Regression: a hang used to leave the router waiting on a completion
+    event that never fires. The watchdog converts it into a failover within
+    ``dispatch_timeout`` of virtual time and the run terminates."""
+    fleet = _fleet()
+    ChaosEngine(fleet, [FaultEvent(4.0, "hang", rid=0)], dispatch_timeout=6.0)
+    stats = _run(fleet)
+    rep = fleet.outcome_report()
+    assert stats["failovers"] == 1
+    assert rep["complete"], rep
+    # the failover happened at hang detection time, not at the horizon
+    failures = [t for (t, a, r, ok) in fleet.chaos.log if a == "hang"]
+    assert failures == [4.0]
+    assert stats["virtual_time"] < 400
+    # the hung host is quarantined, still listed, served nothing after
+    assert any(r.rid == 0 and r.hung for r in fleet.replicas)
+
+
+def test_hang_of_last_replica_still_terminates():
+    """Even when every host is gone the run must end in bounded virtual
+    time — the queue simply stays pending (reported, not dropped)."""
+    fleet = _fleet(n=1, autotier=None)
+    ChaosEngine(fleet, [FaultEvent(3.0, "hang", rid=0)], dispatch_timeout=4.0,
+                max_retries=1, retry_backoff=1.0)
+    stats = _run(fleet, n_requests=8)
+    rep = fleet.outcome_report()
+    assert not rep["complete"]
+    # nothing silently vanished: every admitted rid is completed, failed,
+    # or explicitly listed pending
+    accounted = rep["outcomes"].get("completed", 0) + rep["outcomes"].get(
+        "failed", 0
+    ) + len(rep["pending"])
+    assert accounted == rep["admitted"]
+
+
+@pytest.mark.slow
+def test_transient_stall_recovers_without_failover():
+    """A hang whose recovery lands before the watchdog fires is a stall:
+    the host resumes with its slots intact, no retry, no lost tokens."""
+    fleet = _fleet()
+    ChaosEngine(
+        fleet, [FaultEvent(4.0, "hang", rid=0, duration=3.0)], dispatch_timeout=20.0
+    )
+    stats = _run(fleet)
+    assert stats["failovers"] == 0
+    assert stats["lost_tokens"] == 0 and stats["requests_retried"] == 0
+    assert [a for (_, a, _, ok) in fleet.chaos.log if ok] == ["hang", "hang_recover"]
+    assert fleet.outcome_report()["outcomes"] == {"completed": 12}
+    # the stalled step was dedup-suppressed, then re-run after recovery:
+    # total completions still count each request exactly once
+    assert stats["requests_finished"] == 12
+
+
+def test_retry_budget_exhaustion_fails_with_reason():
+    fleet = _fleet(n=1, autotier=None)
+    ChaosEngine(fleet, [FaultEvent(3.0, "crash", rid=0)], dispatch_timeout=50.0,
+                max_retries=0)
+    _run(fleet, n_requests=6)
+    rep = fleet.outcome_report()
+    assert rep["complete"], rep
+    assert rep["outcomes"].get("failed", 0) > 0
+    assert all(o == "failed:crash" for o in rep["failed"].values())
+
+
+# ---------------------------------------------------------------------------
+# 4. slowdown + correlated faults
+
+
+@pytest.mark.slow
+def test_slowdown_is_transient_and_deterministic():
+    fleet = _fleet()
+    ChaosEngine(
+        fleet,
+        [FaultEvent(3.0, "slowdown", rid=1, duration=10.0, factor=4.0)],
+        dispatch_timeout=80.0,
+    )
+    victim = fleet.replicas[1]
+    stats = _run(fleet)
+    assert victim.speed == 1.0  # restored
+    assert fleet.outcome_report()["complete"]
+    assert stats["failovers"] == 0  # a straggler is not a failure
+
+
+@pytest.mark.slow
+def test_correlated_faults_share_one_batch():
+    """Two faults at the same timestamp strike together, before any
+    completion of that batch — a correlated multi-host failure."""
+    fleet = _fleet(n=3)
+    ChaosEngine(
+        fleet,
+        [FaultEvent(5.0, "crash", rid=1), FaultEvent(5.0, "crash", rid=2)],
+        dispatch_timeout=50.0,
+    )
+    stats = _run(fleet)
+    assert [(t, a, r) for (t, a, r, _) in fleet.chaos.log] == [
+        (5.0, "crash", 1), (5.0, "crash", 2)
+    ]
+    assert sorted(stats["crashed_replicas"]) == [1, 2]
+    assert fleet.outcome_report()["complete"]
+
+
+@pytest.mark.slow
+def test_fault_on_already_dead_host_is_logged_not_applied():
+    fleet = _fleet()
+    ChaosEngine(
+        fleet,
+        [FaultEvent(5.0, "crash", rid=1), FaultEvent(6.0, "hang", rid=1)],
+        dispatch_timeout=50.0,
+    )
+    _run(fleet)
+    assert fleet.chaos.log[0][3] is True  # crash applied
+    assert fleet.chaos.log[1][3] is False  # hang found the host gone
+
+
+# ---------------------------------------------------------------------------
+# 5. degraded mode + epoch fencing
+
+
+@pytest.mark.slow
+def test_degrade_serves_far_tier_only_then_recovers():
+    fleet = _fleet()
+    ChaosEngine(
+        fleet,
+        [FaultEvent(3.0, "degrade", rid=0, duration=12.0)],
+        dispatch_timeout=80.0,
+    )
+    victim = fleet.replicas[0]
+    stats = _run(fleet)
+    assert fleet.outcome_report()["complete"]
+    # the mode transition is on the books, and the host kept serving
+    assert victim.engine.metrics.total("degraded_entries") == 1
+    assert not victim.engine.degraded  # recovered
+    assert stats["requests_finished"] == 12
+    log = [a for (_, a, _, ok) in fleet.chaos.log if ok]
+    assert log == ["degrade", "degrade_recover"]
+
+
+def test_degraded_engine_near_tier_is_empty_and_pushes_rejected():
+    fleet = _fleet()
+    eng = fleet.replicas[0].engine
+    _run(fleet, n_requests=6)
+    assert (eng.placement.tier == 0).sum() > 0  # near tier in use
+    eng.enter_degraded()
+    assert (eng.placement.tier == 0).sum() == 0  # capacity-zeroed
+    # external pushes bounce while degraded
+    assert fleet.replicas[0].apply_placement(np.arange(4)) == 0
+    assert eng.metrics.total("placement_rejected") == 1
+    eng.exit_degraded()
+    # near set stays empty until the next epoch refills it — recovery is a
+    # planning decision, not a blind restore
+    assert (eng.placement.tier == 0).sum() == 0
+
+
+def test_stale_epoch_placement_fenced():
+    fleet = _fleet()
+    r = fleet.replicas[0]
+    _run(fleet, n_requests=6)
+    epoch = fleet.autotierer.epoch_seq
+    assert epoch > 0
+    r.engine.fence_placement(epoch)
+    # a plan stamped at (or before) the fence predates the transition
+    assert r.apply_placement(np.arange(4), epoch=epoch) == 0
+    assert r.engine.metrics.total("placement_rejected") == 1
+    # the next epoch clears the fence
+    assert r.apply_placement(np.arange(4), epoch=epoch + 1) >= 0
+    assert r.engine.metrics.total("placement_rejected") == 1
+
+
+@pytest.mark.slow
+def test_degrade_fences_in_flight_epoch():
+    """A degrade mid-run fences the epoch that was current when it struck:
+    a push planned from pre-fault profiles can never land post-recovery."""
+    fleet = _fleet()
+    ChaosEngine(
+        fleet,
+        [FaultEvent(9.0, "degrade", rid=0, duration=4.0)],
+        dispatch_timeout=80.0,
+    )
+    victim = fleet.replicas[0]
+    _run(fleet)
+    fence = victim.engine._placement_fence
+    assert fence > 0
+    # a plan stamped from the pre-fault profile set bounces off the fence;
+    # the next planned epoch lands
+    rejected_before = victim.engine.metrics.total("placement_rejected")
+    assert victim.apply_placement(np.arange(4), epoch=fence) == 0
+    assert victim.engine.metrics.total("placement_rejected") == rejected_before + 1
+    assert victim.apply_placement(np.arange(4), epoch=fence + 1) >= 0
+    assert victim.engine.metrics.total("placement_rejected") == rejected_before + 1
+
+
+# ---------------------------------------------------------------------------
+# 6. per-tenant fault attribution + lockstep guard
+
+
+@pytest.mark.slow
+def test_tenant_report_carries_fault_columns():
+    fleet = _fleet()
+    ChaosEngine(fleet, [FaultEvent(5.0, "crash", rid=1)], dispatch_timeout=50.0)
+    stats = _run(fleet)
+    tr = stats["tenants"]["default"]
+    assert tr.get("failovers", 0) >= 1
+    assert tr.get("retries", 0) >= 1
+    assert tr.get("lost_tokens", 0) == stats["lost_tokens"]
+    # fault-free tenant reports carry NO fault columns (equivalence surface)
+    clean = _fleet()
+    s2 = _run(clean)
+    assert "failovers" not in s2["tenants"]["default"]
+
+
+def test_lockstep_mode_rejects_fault_scenarios():
+    fleet = _fleet()
+    ChaosEngine(fleet, [FaultEvent(5.0, "crash", rid=1)])
+    gen = RequestGenerator(_profile(), vocab_size=fleet_vocab(), seed=0)
+    with pytest.raises(ValueError, match="lockstep"):
+        fleet.run(gen, n_requests=4, max_steps=50, lockstep=True)
+
+
+@pytest.mark.slow
+def test_recorder_sees_fault_retry_failover_spans():
+    from repro.obs import FlightRecorder
+
+    fleet = _fleet(recorder=FlightRecorder(capacity=4096, step_spans=False))
+    ChaosEngine(fleet, [FaultEvent(5.0, "crash", rid=1)], dispatch_timeout=50.0)
+    _run(fleet)
+    names = {s.name for s in fleet.recorder.spans.finished()}
+    assert {"fault", "failover", "retry"} <= names
+    snap = fleet.fleet_metrics()
+    assert sum(v for (n, _), v in snap.counters.items() if n == "retries") > 0
+    assert sum(v for (n, _), v in snap.counters.items() if n == "faults") > 0

@@ -253,6 +253,75 @@ def test_drain_cadence_equivalence_with_promote():
     assert de["drains"] > dw["drains"]
 
 
+def test_drain_counters_idempotent_and_partial_init_safe():
+    """Crash-safety contract: a second drain with no traffic in between
+    charges NOTHING (the plane was zeroed), a drain on a store whose
+    counter plane was never armed is a clean no-op, and a quarantine drain
+    (``discard=True``) returns the deltas WITHOUT folding them into the
+    books — so a crashed host's follow-up stats/export reads are safe."""
+    # partial init: no write/lookup/ensure_counter_plane ever happened
+    fresh = TieredKVCache(n_pages=16, row_dim=8, near_capacity=4, counter_slots=4)
+    d = fresh.drain_counters()
+    assert d["near"] == 0 and d["far"] == 0 and fresh.drains == 0
+    # accumulate via the segmented dispatch (the path that feeds the
+    # device plane), then double-drain: second is a no-op on every book
+    rng = np.random.default_rng(0)
+    store = TieredKVCache(n_pages=16, row_dim=8, near_capacity=4, counter_slots=4)
+    store.write(np.arange(16), rng.standard_normal((16, 8)).astype(np.float32))
+    store.migrate(np.arange(4))
+    ids = np.array([0, 1, 8, 9])
+    store.lookup_segments(ids, np.zeros(4, np.int32), 2, slot_idx=[0], tenant_idx=[0])
+    d1 = store.drain_counters()
+    assert d1["near"] == 2 and d1["far"] == 2
+    books = (store.near_hits, store.far_hits, store.host_syncs, store.drains)
+    assert books[:2] == (2, 2)
+    d2 = store.drain_counters()
+    assert d2["near"] == 0 and d2["far"] == 0
+    assert (store.near_hits, store.far_hits, store.host_syncs, store.drains) == books
+    # quarantine drain: deltas come back, books stay untouched
+    store.lookup_segments(np.array([0, 8]), np.zeros(2, np.int32), 2,
+                          slot_idx=[0], tenant_idx=[0])
+    q = store.drain_counters(discard=True)
+    assert q["near"] == 1 and q["far"] == 1
+    assert (store.near_hits, store.far_hits) == books[:2]
+    # and the plane really was zeroed by the quarantine: nothing left over
+    d3 = store.drain_counters()
+    assert d3["near"] == 0 and d3["far"] == 0
+
+
+def test_degraded_mode_keeps_one_dispatch_budget(monkeypatch):
+    """Far-tier-only serving is a placement change, not a code path change:
+    the degraded engine still pays exactly ONE tiered dispatch per step and
+    no mandatory per-step host syncs, with every read a far hit."""
+    calls = []
+    orig_seg = tiered_kv_mod.tiered_lookup_segments
+
+    def seg(*a, **k):
+        calls.append("seg")
+        return orig_seg(*a, **k)
+
+    monkeypatch.setattr(tiered_kv_mod, "tiered_lookup_segments", seg)
+    cfg, eng = _mk_engine(True)
+    eng.enter_degraded()
+    assert eng.degraded and eng.tiered.degraded
+    gen = _gen(cfg)
+    for _ in range(6):
+        eng.submit(next(gen))
+    syncs_before = eng.tiered.host_syncs
+    while (eng.queue or any(s.active for s in eng.slots)) and eng.engine_steps < 200:
+        before = len(calls)
+        eng.step()
+        assert len(calls) - before == 1, (len(calls) - before)
+    assert eng.tiered.dispatches == eng.engine_steps
+    # the only syncs are profiler-window boundary drains, never per-step
+    assert eng.tiered.host_syncs - syncs_before < eng.engine_steps
+    d = eng.tiered.drain_counters()
+    stats = eng.stats()
+    dev = stats["device_tiering"]
+    assert dev["near_hits"] == 0 and dev["far_hits"] > 0  # far-tier-only
+    assert stats["near_hit_rate"] == 0.0
+
+
 # ---------------------------------------------------------------------------
 # 3. deque admission
 

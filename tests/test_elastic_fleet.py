@@ -207,6 +207,109 @@ def test_scaled_up_replica_records_join_time():
     assert r.export_profile().clock_offset == r.created_at
 
 
+# ---------------------------------------------------------------------------
+# scheduler cancellation + faults racing scale events
+
+
+def test_scheduler_cancel_skips_without_trace():
+    """A cancelled event is swept without running, without advancing the
+    clock, without forming a batch — the property that makes the armed-but-
+    idle watchdog invisible in the event books."""
+    from repro.fleet.scheduler import VirtualScheduler
+
+    sched = VirtualScheduler()
+    ran = []
+    batches = []
+    e1 = sched.post(1.0, lambda: ran.append("a"))
+    e2 = sched.post(1.0, lambda: ran.append("b"))
+    sched.post(2.0, lambda: ran.append("c"))
+    assert sched.cancel(e2) is True
+    assert sched.cancel(e2) is False  # idempotent
+    assert sched.cancel(None) is False  # None-safe
+    assert sched.live_pending == 2 and sched.pending == 3
+    sched.run(quiescent=lambda t: batches.append(t))
+    assert ran == ["a", "c"]
+    assert batches == [1.0, 2.0]
+    assert sched.events_cancelled == 1 and sched.events_run == 2
+
+
+def test_scheduler_fully_cancelled_timestamp_advances_nothing():
+    from repro.fleet.scheduler import VirtualScheduler
+
+    sched = VirtualScheduler()
+    ran = []
+    batches = []
+    ev = sched.post(5.0, lambda: ran.append("dead"))
+    sched.post(9.0, lambda: ran.append("live"))
+    sched.cancel(ev)
+    sched.run(quiescent=lambda t: batches.append(t))
+    # t=5.0 never happened: no batch, and the clock went straight to 9.0
+    assert batches == [9.0] and ran == ["live"]
+    assert sched.batches == 1
+
+
+def test_scheduler_cancel_and_reschedule():
+    """The watchdog reschedule pattern: cancel the pending event, post a
+    replacement at a later time — exactly one of the two ever runs."""
+    from repro.fleet.scheduler import VirtualScheduler
+
+    sched = VirtualScheduler()
+    fired = []
+    ev = sched.post(3.0, lambda: fired.append("old"))
+
+    def at_one():
+        sched.cancel(ev)
+        sched.post(6.0, lambda: fired.append("new"))
+
+    sched.post(1.0, at_one)
+    sched.run()
+    assert fired == ["new"] and sched.now == 6.0
+    # cancel is idempotent: a second cancel of the same event is a no-op
+    assert sched.cancel(ev) is False
+    # cancelling an ALREADY-RUN event is a harmless no-op (lazy removal
+    # popped it from the heap): teardown paths cancel unconditionally
+    done = sched.post(7.0, lambda: fired.append("late"))
+    sched.run()
+    assert fired == ["new", "late"]
+    assert sched.cancel(done) is True  # marks it, but it will never be swept
+    assert sched.live_pending == 0
+
+
+@pytest.mark.slow
+def test_crash_races_pending_scale_down():
+    """A draining victim that crashes is retired exactly once, through the
+    crash path: its books land in crashed_stats (not retired_stats), the
+    elastic history shows drain -> crash with no drained-retire, and the
+    run still terminates with every request accounted."""
+    from repro.fleet import ChaosEngine, FaultEvent
+
+    fleet = _elastic_fleet(elastic=dict(_MANUAL))
+    _burst_run(fleet, n_requests=16, submit_per_step=2)
+    victim = fleet.replicas[-1]
+    fleet.elastic.scale_down(fleet._now, reason="test")
+    assert victim.draining
+    # crash the draining host at the very start of the next run: FAULT
+    # priority sorts before that timestamp's completions and the per-batch
+    # retire-on-drained check, so the crash deterministically wins the race
+    ChaosEngine(
+        fleet,
+        [FaultEvent(fleet._now, "crash", rid=victim.rid)],
+        dispatch_timeout=50.0,
+    )
+    _burst_run(fleet, n_requests=8, submit_per_step=2, seed=9)
+    assert victim not in fleet.replicas
+    actions = [(e.action, e.rid) for e in fleet.elastic.events]
+    assert ("drain", victim.rid) in actions
+    assert ("crash", victim.rid) in actions
+    assert ("retire", victim.rid) not in actions  # crash won the race
+    assert victim.rid in [s["rid"] for s in fleet.crashed_stats]
+    assert victim.rid not in [s["rid"] for s in fleet.elastic.retired_stats]
+    # its profile is folded exactly once into the fleet aggregate
+    assert sum(1 for p in fleet.export_profiles() if p.rid == victim.rid) == 1
+    rep = fleet.outcome_report()
+    assert rep["complete"], rep
+
+
 def test_admission_pressure_export():
     adm = AdmissionController(SLOModel(max_delay_steps=8.0), pressure_window=4)
     fleet = _elastic_fleet(admission=adm, elastic=None)

@@ -97,6 +97,39 @@ def test_span_lifecycle_and_drain_open():
     assert last.name == "decode" and last.t1 == 9.0 and last.args["truncated"]
 
 
+def test_double_end_records_one_span_and_is_counted():
+    """Failover races can end the same span twice (e.g. a queue span closed
+    by dispatch, then again by a stale path): exactly ONE span reaches the
+    ring, the duplicate is counted in the ``double_end`` book instead of
+    producing a bogus unmatched-instant."""
+    rec = SpanRecorder()
+    rec.begin("queue", 7, 1.0)
+    rec.end("queue", 7, 3.0)
+    assert rec.end("queue", 7, 4.0) is None  # duplicate: swallowed
+    assert rec.double_end == 1
+    spans = [s for s in rec.finished() if s.name == "queue"]
+    assert len(spans) == 1 and spans[0].t1 == 3.0
+    # a NEVER-begun end still degrades to the tagged instant (distinct case)
+    u = rec.end("queue", 99, 5.0)
+    assert u.args["unmatched"] is True and rec.double_end == 1
+    # re-begin after a close re-arms the pair: next end is legitimate
+    rec.begin("queue", 7, 6.0)
+    s = rec.end("queue", 7, 8.0)
+    assert s.t1 == 8.0 and rec.double_end == 1
+    # drain_open flushes re-opened spans; a later duplicate end of a
+    # drained key is still just a count, not a span
+    rec.begin("decode", 7, 9.0)
+    rec.drain_open(10.0)
+    assert rec.end("decode", 7, 11.0) is None
+    assert rec.double_end == 2
+    # the book rides the merged metric snapshot like the drop counter
+    fr = FlightRecorder(capacity=8)
+    fr.spans.begin("x", 1, 0.0)
+    fr.spans.end("x", 1, 1.0)
+    fr.spans.end("x", 1, 2.0)
+    assert fr.merged_snapshot().gauges[("spans_double_end", ())] == 1
+
+
 # ---------------------------------------------------------------------------
 # 2. metrics plane: exact merge, deterministic quantiles
 

@@ -254,6 +254,84 @@ def test_one_shard_engine_bit_exact():
     assert dsh["shards"] == 1
 
 
+@pytest.mark.slow
+def test_one_shard_engine_bit_exact_across_degraded_toggle():
+    """The 1-shard == unsharded anchor must survive a mid-run failure-mode
+    transition: both engines enter degraded (near tier capacity-zeroed,
+    far-tier-only serving) at the same step, keep serving, and exit at the
+    same step — tokens and every merged counter stay bit-identical, and
+    the store-level degraded flag fans out to the shard facade."""
+
+    def run_toggled(eng, cfg):
+        prof = dataclasses.replace(
+            get_profile("Web1"), prompt_mean=24, decode_mean=8, prefix_share=0.5,
+            n_prefixes=2,
+        )
+        gen = RequestGenerator(prof, vocab_size=cfg.vocab_size, seed=0)
+        for _ in range(6):
+            eng.submit(next(gen))
+        tokens = []
+        while (eng.queue or any(s.active for s in eng.slots)) and eng.engine_steps < 400:
+            if eng.engine_steps == 6:
+                eng.enter_degraded()
+                assert eng.degraded and eng.tiered.degraded
+            if eng.engine_steps == 14:
+                eng.exit_degraded()
+            eng.step()
+            tokens.append(np.asarray(eng.next_tokens))
+        return np.array(tokens)
+
+    cfg, api, params, ecfg = _mk_base(tiered_verify=True)
+    base = ServingEngine(api, params, ecfg, seed=0)
+    t_base = run_toggled(base, cfg)
+    cfg, api, params, ecfg1 = _mk_base(tiered_verify=True, model_shards=1)
+    shrd = ShardedServingEngine(api, params, ecfg1, seed=0)
+    t_shrd = run_toggled(shrd, cfg)
+    np.testing.assert_array_equal(t_base, t_shrd)
+    assert not base.degraded and not shrd.degraded
+    assert base.live_counters() == shrd.live_counters()
+    sb, ss = base.stats(), shrd.stats()
+    for key in ("tokens_decoded", "requests_finished", "near_hit_rate",
+                "prefill_tokens", "tenants"):
+        assert sb[key] == ss[key], key
+    db, dsh = sb["device_tiering"], ss["device_tiering"]
+    for key in ("near_hits", "far_hits", "writes", "moved_rows", "moved_bytes",
+                "dispatches"):
+        assert db[key] == dsh[key], key
+    # the toggle really bit: the window served far-only on both engines
+    assert base.metrics.total("degraded_entries") == 1
+    assert shrd.metrics.total("degraded_entries") == 1
+
+
+def test_sharded_store_degraded_flag_and_discard_drain():
+    """Store-facade contracts the failover path relies on: ``set_degraded``
+    fans out to every shard (``degraded`` is the AND over them), a degraded
+    ``migrate`` demotes and never promotes, and a quarantine drain
+    (``discard=True``) returns the merged deltas without charging any
+    shard's books."""
+    n_pages, cap, slots = 64, 10, 6
+    _, shrd, _, _ = _paired_stores(n_pages, 2, capacity=cap, slots=slots)
+    shrd.migrate(np.arange(8))
+    assert shrd.near_count == 8
+    shrd.set_degraded(True)
+    assert shrd.degraded and all(sh.degraded for sh in shrd.shards)
+    shrd.migrate(np.arange(16))  # a promote plan while degraded...
+    assert shrd.near_count == 0  # ...demotes everything instead
+    ids = np.arange(12)
+    shrd.lookup_segments(
+        ids, np.zeros(ids.size, np.int32), 2, slot_idx=[0], tenant_idx=[0]
+    )
+    before = (shrd.near_hits, shrd.far_hits, shrd.drains)
+    q = shrd.drain_counters(discard=True)
+    assert q["near"] == 0 and q["far"] == ids.size  # far-tier-only serving
+    assert (shrd.near_hits, shrd.far_hits, shrd.drains) == before  # uncharged
+    # plane is clean after the quarantine: a real drain charges nothing
+    d = shrd.drain_counters()
+    assert d["near"] == 0 and d["far"] == 0
+    shrd.set_degraded(False)
+    assert not shrd.degraded
+
+
 @multi_device
 @pytest.mark.slow
 @pytest.mark.parametrize("n_shards", [2, 4])
